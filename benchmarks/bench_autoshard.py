@@ -1,0 +1,65 @@
+"""Beyond-paper: the scheduler as the framework's placement layer.
+
+For each assigned (arch × serving shape) on a mixed TPU fleet, compare
+DagHetPart placement against the DagHetMem packer: estimated step
+latency (the paper's makespan, seconds), stage counts, and emergent
+expert parallelism."""
+from __future__ import annotations
+
+from repro.configs import ARCH_IDS, get_config, shape_by_name
+from repro.core.autoshard import plan
+from repro.core.platform import tpu_fleet_si
+
+from .common import emit
+
+# fleets sized to each model class (chips)
+_FLEET = {
+    "small": {"v5e": 12, "v4": 4},
+    "mid": {"v5e": 48, "v4": 16},
+    "big": {"v5e": 96, "v5p": 32},
+}
+
+
+def _fleet_for(cfg):
+    p = cfg.total_params()
+    if p < 5e9:
+        return tpu_fleet_si(_FLEET["small"]), "small"
+    if p < 1e11:
+        return tpu_fleet_si(_FLEET["mid"]), "mid"
+    return tpu_fleet_si(_FLEET["big"]), "big"
+
+
+def run(archs=None, shapes=("decode_32k",)) -> dict:
+    out = {}
+    for arch in archs or ARCH_IDS:
+        cfg = get_config(arch)
+        plat, fleet_name = _fleet_for(cfg)
+        for shape_name in shapes:
+            shape = shape_by_name(shape_name)
+            kp = [1, 4, 8, 16, 24, 32, 48, 64, plat.k]
+            kp = sorted({k for k in kp if k <= plat.k})
+            het = plan(cfg, shape, plat, kprime=kp)
+            base = plan(cfg, shape, plat, algo="dag_het_mem")
+            key = f"{arch}/{shape_name}"
+            if het is None:
+                emit(f"autoshard/{key}/status", "infeasible",
+                     f"fleet={fleet_name}")
+                continue
+            out[key] = (het, base)
+            emit(f"autoshard/{key}/est_step_ms", het.est_step_s * 1e3,
+                 f"fleet={fleet_name};stages={het.n_stages}")
+            if base is not None:
+                emit(f"autoshard/{key}/baseline_step_ms",
+                     base.est_step_s * 1e3, "dag_het_mem")
+                emit(f"autoshard/{key}/speedup_vs_baseline",
+                     base.est_step_s / het.est_step_s, "x")
+            if het.expert_placement:
+                spread = len(set(het.expert_placement.values()))
+                emit(f"autoshard/{key}/expert_stage_spread", spread,
+                     "emergent_expert_parallelism")
+            emit(f"autoshard/{key}/valid", het.valid, "")
+    return out
+
+
+if __name__ == "__main__":
+    run()

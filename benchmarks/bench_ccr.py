@@ -1,0 +1,47 @@
+"""Fig. 7: impact of the communication-to-computation ratio — the
+relative makespan as a function of cluster bandwidth β ∈ [0.1, 5].
+Paper: higher bandwidth lets DagHetPart exploit parallelism better;
+fanned-out families react the most."""
+from __future__ import annotations
+
+from repro.core import default_cluster
+
+from .common import emit, geomean, relative_makespan_table
+
+BETAS = (0.1, 0.5, 1.0, 2.0, 5.0)
+
+
+def run(sizes=(200,), seeds=(1, 2)) -> dict:
+    out = {}
+    fan_out, fan_in = {}, {}
+    for beta in BETAS:
+        plat = default_cluster(beta=beta)
+        table = relative_makespan_table(plat, sizes, seeds)
+        ratios = [r.ratio for runs in table.values() for r in runs
+                  if r.ratio and r.family != "real"]
+        out[beta] = geomean(ratios)
+        emit(f"ccr/beta={beta}/relative_makespan", out[beta] * 100,
+             "pct;paper_fig7")
+        fanned = [r.ratio for f in ("blast", "bwa") for r in table[f]
+                  if r.ratio]
+        chainy = [r.ratio for f in ("soykb", "epigenomics")
+                  for r in table.get(f, []) if r.ratio]
+        fan_out[beta] = geomean(fanned)
+        fan_in[beta] = geomean(chainy)
+    if out[BETAS[-1]] and out[BETAS[0]]:
+        emit("ccr/high_bw_improves_over_low",
+             bool(out[BETAS[-1]] <= out[BETAS[0]] * 1.02),
+             "paper:trend_down_with_bandwidth")
+    if fan_out[BETAS[0]] and fan_out[BETAS[-1]]:
+        emit("ccr/fanned_families_gain",
+             fan_out[BETAS[0]] / fan_out[BETAS[-1]],
+             "x;paper=3.14x_small")
+    if fan_in[BETAS[0]] and fan_in[BETAS[-1]]:
+        emit("ccr/chainy_families_gain",
+             fan_in[BETAS[0]] / fan_in[BETAS[-1]],
+             "x;paper=1.27x_small")
+    return out
+
+
+if __name__ == "__main__":
+    run()

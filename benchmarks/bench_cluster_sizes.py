@@ -1,0 +1,33 @@
+"""Fig. 3 (right): relative makespan vs cluster size (18/36/60 CPUs).
+Paper: improvement grows with cluster size (to ~4.96× on big flows)."""
+from __future__ import annotations
+
+from repro.core import default_cluster, large_cluster, small_cluster
+
+from .common import emit, geomean, relative_makespan_table
+
+_KP = {
+    18: [1, 2, 4, 6, 9, 13, 18],
+    36: None,  # default KPRIME
+    60: [1, 2, 4, 8, 12, 18, 27, 40, 60],
+}
+
+
+def run(sizes=(200, 1000), seeds=(1,)) -> dict:
+    out = {}
+    for plat in (small_cluster(), default_cluster(), large_cluster()):
+        table = relative_makespan_table(plat, sizes, seeds,
+                                        kprime=_KP.get(plat.k))
+        ratios = [r.ratio for runs in table.values() for r in runs
+                  if r.ratio and runs and r.family != "real"]
+        out[plat.k] = geomean(ratios)
+        emit(f"cluster_size/{plat.k}cpus/relative_makespan",
+             out[plat.k] * 100, "pct;paper_fig3_right")
+    if out.get(60) and out.get(18):
+        emit("cluster_size/large_beats_small",
+             out[60] <= out[18] * 1.05, "paper:improves_with_size")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""§5.2.4: workflows with 4× bigger task workloads w_u.  Paper: the
+relative makespan is virtually identical to the 1× case."""
+from __future__ import annotations
+
+from repro.core import default_cluster
+
+from .common import emit, geomean, relative_makespan_table
+
+
+def run(sizes=(200,), seeds=(1, 2)) -> dict:
+    plat = default_cluster()
+    out = {}
+    for mult in (1.0, 4.0):
+        table = relative_makespan_table(plat, sizes, seeds,
+                                        work_multiplier=mult)
+        ratios = [r.ratio for runs in table.values() for r in runs
+                  if r.ratio and r.family != "real"]
+        out[mult] = geomean(ratios)
+        emit(f"compute_demand/{mult}x/relative_makespan",
+             out[mult] * 100, "pct;paper_5.2.4")
+    drift = abs(out[4.0] - out[1.0]) / out[1.0]
+    emit("compute_demand/drift", drift,
+         "frac;paper:virtually_identical(<0.15)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

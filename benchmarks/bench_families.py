@@ -1,0 +1,35 @@
+"""Figs. 5–6: per-family relative and absolute makespan vs workflow
+size.  Paper: blast/bwa/seismology (high fan-out) are consistently easy;
+soykb/epigenomics gain less; absolute makespans grow ~linearly."""
+from __future__ import annotations
+
+from repro.core import FAMILIES, default_cluster, generate_workflow
+
+from .common import emit, run_pair
+
+
+def run(sizes=(200, 600, 1000), seeds=(1,)) -> dict:
+    plat = default_cluster()
+    out = {}
+    for family in FAMILIES:
+        per_size = {}
+        for n in sizes:
+            rs = []
+            for seed in seeds:
+                wf = generate_workflow(family, n, seed=seed, platform=plat)
+                rs.append(run_pair(wf, plat))
+            ratios = [r.ratio for r in rs if r.ratio]
+            abs_ms = [r.het_ms for r in rs if r.het_ms]
+            rel = sum(ratios) / len(ratios) if ratios else float("nan")
+            ab = sum(abs_ms) / len(abs_ms) if abs_ms else float("nan")
+            per_size[n] = (rel, ab)
+            emit(f"families/{family}/n={n}/relative_makespan",
+                 rel * 100, "pct;paper_fig5")
+            emit(f"families/{family}/n={n}/absolute_makespan", ab,
+                 "units;paper_fig6")
+        out[family] = per_size
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Table 4 / Figs. 8–9: scheduling runtimes of both algorithms.
+
+Paper (C++): real <1 s; small ≈ seconds (DagHetPart 1.63× slower);
+middle ≈ minutes (parity); big: DagHetPart 0.85× (faster).  The
+Python-vs-C++ constant differs; the *shape* (relative trend with size)
+is the claim under test."""
+from __future__ import annotations
+
+from repro.core import default_cluster, real_like_workflows
+
+from .common import emit, geomean, run_pair, workflow_suite
+
+
+def run(sizes=(200, 1000), seeds=(1,)) -> dict:
+    plat = default_cluster()
+    out: dict[str, dict] = {}
+    groups: dict[int, list] = {}
+    for family, n, seed, wf in workflow_suite(plat, sizes, seeds):
+        groups.setdefault(n, []).append(run_pair(wf, plat))
+    for n, rs in sorted(groups.items()):
+        base_t = geomean([r.base_time_s for r in rs])
+        het_t = geomean([r.het_time_s for r in rs])
+        out[f"n={n}"] = {"base_s": base_t, "het_s": het_t}
+        emit(f"runtime/n={n}/dag_het_mem_s", base_t, "paper_table4")
+        emit(f"runtime/n={n}/dag_het_part_s", het_t, "paper_table4")
+        emit(f"runtime/n={n}/relative", het_t / base_t,
+             "x;paper:shrinks_with_size")
+    real = [run_pair(wf, plat) for wf in real_like_workflows()]
+    emit("runtime/real/dag_het_part_s",
+         geomean([r.het_time_s for r in real]), "paper:<1s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,113 @@
+"""Shared benchmark infrastructure.
+
+Benchmarks mirror the paper's experimental setup (§5.1) at CPU-budget
+sizes: the paper's size groups are real (11–58 tasks), small (≤8k),
+middle (10k–18k), big (20k–30k); quick mode uses {200, 1000} tasks and
+2 seeds, ``--full`` grows to {200, 1000, 4000, 10000} (hour-scale).
+
+Output contract: ``name,value,derived`` CSV rows on stdout.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import (
+    FAMILIES,
+    dag_het_mem,
+    dag_het_part,
+    generate_workflow,
+    real_like_workflows,
+    validate_mapping,
+)
+
+KPRIME = [1, 2, 4, 6, 9, 13, 19, 28, 36]
+
+
+@dataclass
+class RunResult:
+    family: str
+    n_tasks: int
+    seed: int
+    base_ms: float | None
+    het_ms: float | None
+    base_time_s: float
+    het_time_s: float
+
+    @property
+    def ratio(self) -> float | None:
+        if self.base_ms and self.het_ms:
+            return self.het_ms / self.base_ms
+        return None
+
+
+def run_pair(wf, platform, kprime=None, validate: bool = False):
+    """Run baseline + heuristic on one workflow; returns RunResult."""
+    t0 = time.perf_counter()
+    base = dag_het_mem(wf, platform)
+    t1 = time.perf_counter()
+    het = dag_het_part(wf, platform, kprime=kprime or KPRIME)
+    t2 = time.perf_counter()
+    if validate:
+        if base is not None:
+            assert validate_mapping(wf, base) == [], wf.name
+        if het is not None:
+            assert validate_mapping(wf, het) == [], wf.name
+    return RunResult(
+        family=wf.name.split("_")[0] if wf.name else "?",
+        n_tasks=wf.n,
+        seed=0,
+        base_ms=base.makespan if base else None,
+        het_ms=het.makespan if het else None,
+        base_time_s=t1 - t0,
+        het_time_s=t2 - t1,
+    )
+
+
+def workflow_suite(platform, sizes=(200, 1000), seeds=(1, 2),
+                   work_multiplier: float = 1.0):
+    """(family, size, seed, workflow) tuples for the synthetic suite."""
+    for family in FAMILIES:
+        for n in sizes:
+            for seed in seeds:
+                wf = generate_workflow(family, n, seed=seed,
+                                       platform=platform,
+                                       work_multiplier=work_multiplier)
+                yield family, n, seed, wf
+
+
+def geomean(vals) -> float:
+    vals = [v for v in vals if v is not None and v > 0]
+    if not vals:
+        return float("nan")
+    return float(np.exp(np.mean(np.log(vals))))
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """The ``name,value,derived`` CSV contract of benchmarks.run."""
+    if isinstance(value, float):
+        value = f"{value:.6g}"
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def relative_makespan_table(platform, sizes, seeds, kprime=None,
+                            work_multiplier: float = 1.0):
+    """{family: [RunResult...]} over the synthetic suite + real-like."""
+    out: dict[str, list[RunResult]] = {}
+    for family, n, seed, wf in workflow_suite(
+            platform, sizes, seeds, work_multiplier):
+        r = run_pair(wf, platform, kprime)
+        r = RunResult(family, n, seed, r.base_ms, r.het_ms,
+                      r.base_time_s, r.het_time_s)
+        out.setdefault(family, []).append(r)
+    real = []
+    for wf in real_like_workflows():
+        from repro.core.workflows import scale_memory_to_platform
+        scale_memory_to_platform(wf, platform)
+        r = run_pair(wf, platform, kprime)
+        real.append(RunResult("real", wf.n, 0, r.base_ms, r.het_ms,
+                              r.base_time_s, r.het_time_s))
+    out["real"] = real
+    return out

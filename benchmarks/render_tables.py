@@ -1,0 +1,100 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun*/ JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.render_tables [dirname]
+Prints markdown to stdout.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def load(dirname: str = "dryrun", tag: str = "") -> list[dict]:
+    """Baseline cells only (tagged hillclimb variants excluded unless
+    ``tag`` names them)."""
+    out = []
+    for p in sorted((ROOT / dirname).glob("*.json")):
+        parts = p.stem.split("__")
+        if len(parts) != 3:
+            continue
+        want = ("16x16" + (f"_{tag}" if tag else ""),
+                "2x16x16" + (f"_{tag}" if tag else ""))
+        if parts[2] not in want:
+            continue
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}m"
+    return f"{x*1e6:.1f}µ"
+
+
+def dryrun_table(cells: list[dict], mesh: str) -> str:
+    rows = [c for c in cells if c.get("mesh") == mesh]
+    lines = [
+        f"#### Mesh {mesh}",
+        "",
+        "| arch | shape | policy | compile_s | GiB/dev (TPU est) | fits "
+        "| HLO GFLOPs/dev | coll GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(rows, key=lambda c: (c["arch"], c["shape"])):
+        if c.get("status") != "ok":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | - | - | - | ERROR | - | - |")
+            continue
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['policy']} "
+            f"| {c['compile_s']} | {c['per_device_gib_tpu_est']} "
+            f"| {'✓' if c['fits_hbm'] else '✗'} "
+            f"| {c['hlo_flops_per_device']/1e9:.1f} "
+            f"| {c['collective_bytes_per_device']/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells: list[dict], mesh: str) -> str:
+    rows = [c for c in cells if c.get("mesh") == mesh
+            and c.get("status") == "ok"]
+    lines = [
+        f"#### Mesh {mesh} (per chip; v5e: 197 TFLOP/s bf16, 819 GB/s "
+        "HBM, 50 GB/s/link)",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| useful FLOP frac | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(rows, key=lambda c: (c["arch"], c["shape"])):
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(c['compute_s'])} "
+            f"| {fmt_s(c['memory_s'])} | {fmt_s(c['collective_s'])} "
+            f"| {c['dominant']} | {c['useful_flop_frac']:.3f} "
+            f"| {c['roofline_frac']:.4f} |")
+    return "\n".join(lines)
+
+
+def main():
+    dirname = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
+    cells = load(dirname)
+    print(f"<!-- rendered from experiments/{dirname} -->\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(dryrun_table(cells, mesh))
+        print()
+    print("### Roofline terms\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(roofline_table(cells, mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch × shape ×
+mesh) roofline table and nominate hillclimb candidates.
+
+Terms (per chip, TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s
+ICI/link):
+
+    compute_s    = HLO_FLOPs / peak_FLOPs
+    memory_s     = HLO_bytes(bf16-corrected) / HBM_bw
+    collective_s = collective wire bytes / link_bw
+
+roofline_frac = (MODEL_FLOPS/chips/peak) / max(terms): the fraction of
+ideal machine throughput the compiled program could reach if the
+dominant term ran at its roofline rate.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    want = ("16x16" + (f"_{tag}" if tag else ""),
+            "2x16x16" + (f"_{tag}" if tag else ""))
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        parts = p.stem.split("__")
+        if len(parts) != 3 or parts[2] not in want:
+            continue
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def run(mesh: str = "16x16") -> list[dict]:
+    cells = [c for c in load_cells() if c.get("mesh") == mesh]
+    ok = [c for c in cells if c.get("status") == "ok"]
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"])):
+        key = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        emit(f"{key}/compute_s", c["compute_s"], "")
+        emit(f"{key}/memory_s", c["memory_s"], "bf16corr")
+        emit(f"{key}/collective_s", c["collective_s"], "")
+        emit(f"{key}/dominant", c["dominant"], "")
+        emit(f"{key}/useful_flop_frac", c["useful_flop_frac"],
+             "MODEL_FLOPS/HLO_FLOPS")
+        emit(f"{key}/roofline_frac", c["roofline_frac"], "")
+        emit(f"{key}/fits_hbm", c["fits_hbm"],
+             f"{c.get('per_device_gib_tpu_est', '?')}GiB")
+    failed = [c for c in cells if c.get("status") != "ok"]
+    for c in failed:
+        emit(f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}/status",
+             "ERROR", c.get("error", "")[:80])
+    if ok:
+        worst = min(ok, key=lambda c: c["roofline_frac"])
+        coll = max(ok, key=lambda c: c["collective_s"]
+                   / max(c["compute_s"], 1e-12))
+        emit("roofline/candidates/worst_fraction",
+             f"{worst['arch']}/{worst['shape']}",
+             f"frac={worst['roofline_frac']:.4f}")
+        emit("roofline/candidates/most_collective_bound",
+             f"{coll['arch']}/{coll['shape']}",
+             f"coll/comp={coll['collective_s']/max(coll['compute_s'],1e-12):.1f}")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

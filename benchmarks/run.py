@@ -1,0 +1,64 @@
+"""Benchmark driver — one section per paper table/figure.
+
+``python -m benchmarks.run [--quick|--full] [--only SECTION]``
+prints ``name,value,derived`` CSV rows (the harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    bench_autoshard,
+    bench_ccr,
+    bench_cluster_sizes,
+    bench_compute_demand,
+    bench_default_cluster,
+    bench_families,
+    bench_heterogeneity,
+    bench_runtime,
+    roofline,
+)
+from .common import emit
+
+SECTIONS = {
+    "default_cluster": lambda full: bench_default_cluster.run(
+        sizes=(200, 1000, 4000) if full else (200, 1000)),
+    "cluster_sizes": lambda full: bench_cluster_sizes.run(
+        sizes=(200, 1000, 4000) if full else (200, 1000)),
+    "heterogeneity": lambda full: bench_heterogeneity.run(
+        sizes=(200, 1000) if full else (200,)),
+    "ccr": lambda full: bench_ccr.run(
+        sizes=(200, 1000) if full else (200,)),
+    "families": lambda full: bench_families.run(
+        sizes=(200, 600, 1000, 2000) if full else (200, 600)),
+    "runtime": lambda full: bench_runtime.run(
+        sizes=(200, 1000, 4000) if full else (200, 1000)),
+    "compute_demand": lambda full: bench_compute_demand.run(),
+    "autoshard": lambda full: bench_autoshard.run(),
+    "roofline": lambda full: (roofline.run("16x16"),
+                              roofline.run("2x16x16")),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help=f"one of {sorted(SECTIONS)}")
+    args = ap.parse_args(argv)
+    todo = [args.only] if args.only else list(SECTIONS)
+    for name in todo:
+        t0 = time.perf_counter()
+        emit(f"section/{name}/start", 0, "")
+        try:
+            SECTIONS[name](args.full)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            emit(f"section/{name}/ERROR", repr(e)[:120], "")
+        emit(f"section/{name}/elapsed_s", time.perf_counter() - t0, "")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+"""repro — memory-constrained workflow mapping for heterogeneous TPU
+fleets (Kulagina, Meyerhenke, Benoit — ICPP'24) as a production JAX
+framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from .checkpointer import Checkpointer, load_pytree, save_pytree
+
+__all__ = ["Checkpointer", "load_pytree", "save_pytree"]

@@ -1,0 +1,183 @@
+"""Fault-tolerant checkpointing.
+
+* msgpack-framed tensor store (no external deps), one file per step,
+* atomic writes (tmp + rename) so a crash mid-save never corrupts the
+  latest checkpoint,
+* async mode: saves happen on a background thread from a snapshotted
+  host copy, overlapping with the next train steps,
+* retention of the last ``keep`` checkpoints,
+* restore-to-a-different-mesh: arrays are saved unsharded (gathered);
+  the loader re-shards onto whatever mesh/sharding the caller passes —
+  this is what elastic rescale (repro.runtime.elastic) builds on.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer", "save_pytree", "load_pytree"]
+
+_SENTINEL = "__leaf__"
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _unflatten_into(skeleton, flat, prefix=""):
+    if isinstance(skeleton, dict):
+        return {k: _unflatten_into(skeleton[k], flat, f"{prefix}/{k}")
+                for k in skeleton}
+    if isinstance(skeleton, (list, tuple)):
+        out = [_unflatten_into(v, flat, f"{prefix}/{i}")
+               for i, v in enumerate(skeleton)]
+        return type(skeleton)(out)
+    return flat[prefix]
+
+
+def save_pytree(path: Path, tree, extra_meta: dict | None = None) -> None:
+    """Atomically write a pytree of arrays to ``path``."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp")
+    entries = []
+    with open(tmp, "wb") as f:
+        header_items = []
+        blobs = []
+        offset = 0
+        for key, leaf in _flatten(tree):
+            arr = np.asarray(jax.device_get(leaf))
+            # bfloat16 has no numpy wire format -> view as uint16
+            wire_dtype = str(arr.dtype)
+            if wire_dtype == "bfloat16":
+                arr = arr.view(np.uint16)
+            blob = arr.tobytes()
+            header_items.append({
+                "key": key,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "orig_dtype": wire_dtype,
+                "offset": offset,
+                "nbytes": len(blob),
+            })
+            blobs.append(blob)
+            offset += len(blob)
+        header = json.dumps({
+            "leaves": header_items,
+            "meta": extra_meta or {},
+        }).encode()
+        f.write(len(header).to_bytes(8, "little"))
+        f.write(header)
+        for blob in blobs:
+            f.write(blob)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: Path, skeleton, shardings=None):
+    """Load a pytree saved by :func:`save_pytree`.
+
+    ``skeleton`` supplies the structure; ``shardings`` (same structure,
+    of jax.sharding.Sharding) re-shards each leaf on load — pass the
+    *new* mesh's shardings to restore elastically.
+    """
+    path = Path(path)
+    with open(path, "rb") as f:
+        hlen = int.from_bytes(f.read(8), "little")
+        header = json.loads(f.read(hlen))
+        base = f.tell()
+        flat = {}
+        for item in header["leaves"]:
+            f.seek(base + item["offset"])
+            buf = f.read(item["nbytes"])
+            arr = np.frombuffer(buf, dtype=item["dtype"]).reshape(
+                item["shape"])
+            if item["orig_dtype"] == "bfloat16":
+                import jax.numpy as jnp
+                arr = arr.view(jnp.bfloat16.dtype)
+            flat[item["key"]] = arr
+    tree = _unflatten_into(skeleton, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+def checkpoint_meta(path: Path) -> dict:
+    with open(path, "rb") as f:
+        hlen = int.from_bytes(f.read(8), "little")
+        return json.loads(f.read(hlen))["meta"]
+
+
+class Checkpointer:
+    """Step-indexed checkpoint directory manager with async saves."""
+
+    def __init__(self, directory, keep: int = 3,
+                 async_save: bool = True) -> None:
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+
+    def _path(self, step: int) -> Path:
+        return self.dir / f"ckpt_{step:09d}.msgpack"
+
+    def steps(self) -> list[int]:
+        return sorted(
+            int(p.stem.split("_")[1]) for p in self.dir.glob("ckpt_*.msgpack"))
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def save(self, step: int, tree, extra_meta: dict | None = None) -> None:
+        self.wait()
+        # snapshot to host immediately; write possibly in background
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        meta = dict(extra_meta or {}, step=step)
+
+        def write():
+            save_pytree(self._path(step), host_tree, meta)
+            self._gc()
+
+        if self.async_save:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+
+    def restore(self, skeleton, step: int | None = None, shardings=None):
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        tree = load_pytree(self._path(step), skeleton, shardings)
+        meta = checkpoint_meta(self._path(step))
+        return tree, meta
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            try:
+                self._path(s).unlink()
+            except FileNotFoundError:
+                pass

@@ -1,0 +1,20 @@
+"""Architecture configs — one module per assigned architecture."""
+from .base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    get_smoke_config,
+    shape_by_name,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "get_smoke_config",
+    "shape_by_name",
+]

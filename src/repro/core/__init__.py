@@ -1,0 +1,53 @@
+"""repro.core — the paper's contribution.
+
+Memory-constrained partitioning and mapping of DAG workflows onto
+heterogeneous platforms (Kulagina, Meyerhenke, Benoit — ICPP'24):
+
+* :mod:`repro.core.dag` — workflow / quotient-graph model,
+* :mod:`repro.core.platform` — heterogeneous clusters (paper Tables 2–3
+  plus TPU-fleet presets),
+* :mod:`repro.core.memdag` — min-peak-memory traversals (MemDag role),
+* :mod:`repro.core.partitioner` — acyclic DAG partitioning (dagP role),
+* :mod:`repro.core.makespan` — bottom weights / makespan / critical path,
+* :mod:`repro.core.baseline` — DagHetMem,
+* :mod:`repro.core.heuristic` — DagHetPart (the four-step heuristic),
+* :mod:`repro.core.workflows` — workflow-instance generators,
+* :mod:`repro.core.modelgraph` — model architectures as workflow DAGs,
+* :mod:`repro.core.autoshard` — placement planning for the JAX runtime.
+"""
+from .dag import QuotientGraph, Workflow, build_quotient
+from .platform import (
+    Platform,
+    Processor,
+    default_cluster,
+    large_cluster,
+    less_het_cluster,
+    more_het_cluster,
+    no_het_cluster,
+    small_cluster,
+    tpu_fleet,
+)
+from .makespan import bottom_weights, critical_path, makespan
+from .memdag import block_requirement, exact_min_peak, greedy_min_peak, simulate_peak
+from .partitioner import acyclic_partition, edge_cut, partition_block
+from .baseline import MappingResult, dag_het_mem, validate_mapping
+from .heuristic import dag_het_part
+from .workflows import (
+    FAMILIES,
+    generate_workflow,
+    random_layered_dag,
+    real_like_workflows,
+)
+
+__all__ = [
+    "Workflow", "QuotientGraph", "build_quotient",
+    "Platform", "Processor",
+    "default_cluster", "small_cluster", "large_cluster",
+    "more_het_cluster", "less_het_cluster", "no_het_cluster", "tpu_fleet",
+    "bottom_weights", "critical_path", "makespan",
+    "block_requirement", "exact_min_peak", "greedy_min_peak", "simulate_peak",
+    "acyclic_partition", "edge_cut", "partition_block",
+    "MappingResult", "dag_het_mem", "dag_het_part", "validate_mapping",
+    "FAMILIES", "generate_workflow", "real_like_workflows",
+    "random_layered_dag",
+]

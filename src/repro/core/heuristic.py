@@ -1,0 +1,448 @@
+"""DagHetPart — the four-step partitioning-based heuristic (paper §4.2).
+
+Step 1  Partition the DAG into k' acyclic blocks (edge-cut optimizer).
+Step 2  BiggestAssign/FitBlock: largest block → largest-memory free
+        processor; blocks that do not fit are recursively split.
+Step 3  MergeUnassignedToAssigned/FindMSOptMerge: merge leftover blocks
+        into assigned ones, preferring merges off the critical path,
+        resolving 2-cycles by triple merges, bounded re-queuing.
+Step 4  Swaps: best-improvement block swaps + moves of critical-path
+        blocks to faster idle processors.
+
+The driver sweeps k' ≤ k and keeps the best makespan (paper Step 1).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass
+
+from .baseline import MappingResult
+from .dag import QuotientGraph, Workflow, build_quotient
+from .makespan import critical_path, makespan as compute_makespan
+from .memdag import block_requirement
+from .partitioner import acyclic_partition, partition_block
+from .platform import Platform
+
+__all__ = ["dag_het_part", "kprime_sweep_values"]
+
+
+# ---------------------------------------------------------------------- #
+# Step 2: BiggestAssign + FitBlock (Algorithms 1–2)
+# ---------------------------------------------------------------------- #
+@dataclass
+class _Step2Result:
+    assigned: list[tuple[list[int], int]]  # (tasks, processor)
+    unassigned: list[list[int]]
+
+
+class _BlockPQ:
+    """Max-priority queue of blocks keyed by memory requirement."""
+
+    def __init__(self, wf: Workflow, exact_limit: int) -> None:
+        self.wf = wf
+        self.exact_limit = exact_limit
+        self._heap: list[tuple[float, int, list[int]]] = []
+        self._counter = itertools.count()
+
+    def requirement(self, nodes: list[int]) -> float:
+        return block_requirement(self.wf, nodes,
+                                 exact_limit=self.exact_limit)
+
+    def push(self, nodes: list[int]) -> None:
+        r = self.requirement(nodes)
+        heapq.heappush(self._heap, (-r, next(self._counter), nodes))
+
+    def pop(self) -> tuple[float, list[int]]:
+        negr, _, nodes = heapq.heappop(self._heap)
+        return -negr, nodes
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+_FITS, _SPLIT, _STUCK = 0, 1, 2
+
+
+def _fit_block(
+    nodes: list[int],
+    r: float,
+    queue: _BlockPQ,
+    cap: float,
+) -> int:
+    """FitBlock (Algorithm 2) without the mapping side effect.
+
+    ``_FITS``: block fits ``cap``.  ``_SPLIT``: did not fit, pieces
+    reinserted into the queue.  ``_STUCK``: singleton exceeding ``cap``
+    — cannot be split; the paper's FitBlock would loop, we hand it to
+    Step 3, which may still merge it into a block on a larger-memory
+    processor.
+    """
+    if r <= cap:
+        return _FITS
+    if len(nodes) > 1:
+        for part in partition_block(queue.wf, nodes, 2):
+            queue.push(part)
+        return _SPLIT
+    return _STUCK
+
+
+def _biggest_assign(
+    wf: Workflow,
+    platform: Platform,
+    blocks: list[list[int]],
+    exact_limit: int,
+) -> _Step2Result:
+    """Algorithm 1: assign biggest blocks to biggest memories."""
+    queue = _BlockPQ(wf, exact_limit)
+    for b in blocks:
+        queue.push(b)
+    proc_ids = platform.sorted_by_memory()
+    assigned: list[tuple[list[int], int]] = []
+    stuck: list[list[int]] = []
+    next_proc = 0
+    while queue and next_proc < len(proc_ids):
+        r, nodes = queue.pop()
+        pj = proc_ids[next_proc]
+        status = _fit_block(nodes, r, queue, platform.memory(pj))
+        if status == _FITS:
+            assigned.append((nodes, pj))
+            next_proc += 1
+        elif status == _STUCK:
+            stuck.append(nodes)
+    # remaining blocks: shrink them to the smallest memory (no mapping)
+    unassigned: list[list[int]] = list(stuck)
+    if queue:
+        min_mem = platform.min_memory()
+        while queue:
+            r, nodes = queue.pop()
+            if r <= min_mem or len(nodes) == 1:
+                unassigned.append(nodes)
+            else:
+                for part in partition_block(wf, nodes, 2):
+                    queue.push(part)
+    return _Step2Result(assigned, unassigned)
+
+
+# ---------------------------------------------------------------------- #
+# Step 3: merging (Algorithms 3–4)
+# ---------------------------------------------------------------------- #
+class _Requirements:
+    """Cache of r_{V} keyed by quotient vertex id."""
+
+    def __init__(self, wf: Workflow, exact_limit: int) -> None:
+        self.wf = wf
+        self.exact_limit = exact_limit
+        self._cache: dict[int, float] = {}
+
+    def of(self, q: QuotientGraph, vid: int) -> float:
+        r = self._cache.get(vid)
+        if r is None:
+            r = block_requirement(self.wf, sorted(q.members[vid]),
+                                  exact_limit=self.exact_limit)
+            self._cache[vid] = r
+        return r
+
+    def forget(self, *vids: int) -> None:
+        for v in vids:
+            self._cache.pop(v, None)
+
+
+def _find_ms_opt_merge(
+    v: int,
+    candidates: set[int],
+    q: QuotientGraph,
+    platform: Platform,
+    reqs: _Requirements,
+) -> tuple[float, int | None, int | None]:
+    """Algorithm 3: best merge of unassigned ``v`` into a candidate.
+
+    Returns ``(best_makespan, best_partner, optional_third)``; partner
+    is ``None`` when no feasible merge exists.  ``q`` is restored to its
+    input state before returning.
+    """
+    best_ms = float("inf")
+    best_partner: int | None = None
+    best_third: int | None = None
+    neighbours = (set(q.pred[v]) | set(q.succ[v])) & candidates
+    for vp in sorted(neighbours):
+        target_proc = q.proc[vp]
+        vm, undo = q.merge(v, vp)
+        third: int | None = None
+        undo2 = None
+        cycle = q.find_cycle()
+        if cycle is not None:
+            if len(cycle) == 2:
+                other = cycle[0] if cycle[0] != vm else cycle[1]
+                vm2, undo2 = q.merge(vm, other)
+                if q.find_cycle() is not None:
+                    q.unmerge(undo2)
+                    q.unmerge(undo)
+                    continue
+                third = other
+                vm = vm2
+            else:
+                q.unmerge(undo)
+                continue
+        # memory feasibility on the partner's processor
+        r = block_requirement(reqs.wf, sorted(q.members[vm]),
+                              exact_limit=reqs.exact_limit)
+        if r <= platform.memory(target_proc):
+            q.proc[vm] = target_proc
+            ms = compute_makespan(q, platform)
+            q.proc[vm] = None
+            if ms < best_ms:
+                best_ms, best_partner, best_third = ms, vp, third
+        if undo2 is not None:
+            q.unmerge(undo2)
+        q.unmerge(undo)
+    return best_ms, best_partner, best_third
+
+
+def _merge_unassigned(
+    wf: Workflow,
+    platform: Platform,
+    q: QuotientGraph,
+    reqs: _Requirements,
+) -> bool:
+    """Algorithm 4.  Mutates ``q``; False when some block can't be placed.
+
+    Beyond-paper refinement (DESIGN.md §8): when no merge is feasible,
+    try placing the block on a memory-feasible *idle* processor before
+    giving up — the paper only uses idle processors in Step 4, after a
+    full assignment exists, which strands late-split singletons whose
+    requirement exceeds every assigned block's headroom.
+    """
+    path = set(critical_path(q, platform))
+    assigned = {v for v in q.vertices() if q.proc[v] is not None}
+    queue = [v for v in sorted(q.vertices()) if q.proc[v] is None]
+    seen_count: dict[int, int] = {v: 0 for v in queue}
+    while queue:
+        v = queue.pop(0)
+        ms, partner, third = _find_ms_opt_merge(
+            v, assigned - path, q, platform, reqs)
+        if partner is None:
+            ms, partner, third = _find_ms_opt_merge(
+                v, assigned, q, platform, reqs)
+        if partner is None:
+            # place-on-idle fallback
+            busy = {q.proc[a] for a in assigned}
+            r_v = reqs.of(q, v)
+            idle = [j for j in range(platform.k)
+                    if j not in busy and platform.memory(j) >= r_v]
+            if idle:
+                q.proc[v] = max(idle, key=platform.speed)
+                assigned.add(v)
+                path = set(critical_path(q, platform))
+                continue
+        if partner is not None:
+            target_proc = q.proc[partner]
+            vm, _ = q.merge(v, partner)
+            assigned.discard(partner)
+            reqs.forget(v, partner)
+            if third is not None:
+                in_queue = q.proc[third] is None
+                vm2, _ = q.merge(vm, third)
+                assigned.discard(third)
+                reqs.forget(vm, third)
+                if in_queue and third in queue:
+                    queue.remove(third)
+                vm = vm2
+            q.proc[vm] = target_proc
+            assigned.add(vm)
+            path = set(critical_path(q, platform))
+        else:
+            unresolved_nbrs = any(
+                q.proc[w] is None
+                for w in itertools.chain(q.pred[v], q.succ[v])
+            )
+            if unresolved_nbrs and seen_count.get(v, 0) <= 1:
+                seen_count[v] = seen_count.get(v, 0) + 1
+                queue.append(v)
+            else:
+                return False  # no solution for this k'
+    return True
+
+
+# ---------------------------------------------------------------------- #
+# Step 4: swaps + idle-processor moves (Algorithm 5)
+# ---------------------------------------------------------------------- #
+def _swap_pass(
+    wf: Workflow,
+    platform: Platform,
+    q: QuotientGraph,
+    reqs: _Requirements,
+) -> None:
+    best_ms = compute_makespan(q, platform)
+    while True:
+        best_pair: tuple[int, int] | None = None
+        verts = sorted(q.vertices())
+        for i, v in enumerate(verts):
+            for vp in verts[i + 1:]:
+                pa, pb = q.proc[v], q.proc[vp]
+                if pa == pb:
+                    continue
+                if reqs.of(q, v) > platform.memory(pb):
+                    continue
+                if reqs.of(q, vp) > platform.memory(pa):
+                    continue
+                q.proc[v], q.proc[vp] = pb, pa
+                ms = compute_makespan(q, platform)
+                q.proc[v], q.proc[vp] = pa, pb
+                if ms < best_ms - 1e-12:
+                    best_ms = ms
+                    best_pair = (v, vp)
+        if best_pair is None:
+            return
+        v, vp = best_pair
+        q.proc[v], q.proc[vp] = q.proc[vp], q.proc[v]
+
+
+def _idle_moves(
+    wf: Workflow,
+    platform: Platform,
+    q: QuotientGraph,
+    reqs: _Requirements,
+) -> None:
+    """Move critical-path blocks to faster idle processors."""
+    busy = {q.proc[v] for v in q.vertices()}
+    idle = [j for j in range(platform.k) if j not in busy]
+    if not idle:
+        return
+    moved: set[int] = set()
+    while True:
+        path = critical_path(q, platform)
+        cand = [v for v in path if v not in moved]
+        if not cand:
+            return
+        ms0 = compute_makespan(q, platform)
+        progressed = False
+        for v in cand:
+            moved.add(v)
+            cur = q.proc[v]
+            options = [
+                j for j in idle
+                if platform.speed(j) > platform.speed(cur)
+                and reqs.of(q, v) <= platform.memory(j)
+            ]
+            if not options:
+                continue
+            j = max(options, key=platform.speed)
+            q.proc[v] = j
+            if compute_makespan(q, platform) < ms0 - 1e-12:
+                idle.remove(j)
+                idle.append(cur)
+                progressed = True
+                break  # critical path changed; recompute
+            q.proc[v] = cur
+        if not progressed:
+            return
+
+
+# ---------------------------------------------------------------------- #
+# driver
+# ---------------------------------------------------------------------- #
+def kprime_sweep_values(wf: Workflow, platform: Platform,
+                        mode: str = "auto") -> list[int]:
+    """Which k' values to try (paper: all of 1..k; we default to a
+    geometric subset for very large workflows — a documented knob)."""
+    k = platform.k
+    if mode == "full" or (mode == "auto" and wf.n <= 4000):
+        return list(range(1, k + 1))
+    vals = {1, 2, 3, k}
+    v = 4
+    while v < k:
+        vals.add(v)
+        v = int(v * 1.6) + 1
+    return sorted(x for x in vals if 1 <= x <= k)
+
+
+def dag_het_part(
+    wf: Workflow,
+    platform: Platform,
+    *,
+    kprime: str | list[int] = "auto",
+    exact_limit: int = 0,
+    verbose: bool = False,
+) -> MappingResult | None:
+    """Run the four-step heuristic, sweeping k' and keeping the best.
+
+    ``exact_limit`` bounds the exact min-peak DP used inside block
+    requirement computation (0 ⇒ heuristic traversal only, matching the
+    scale of the paper's experiments).
+    """
+    t0 = time.perf_counter()
+    if isinstance(kprime, list):
+        sweep = kprime
+    else:
+        sweep = kprime_sweep_values(wf, platform, kprime)
+
+    best: MappingResult | None = None
+    for kp in sweep:
+        res = _run_single(wf, platform, kp, exact_limit)
+        if res is None:
+            continue
+        if best is None or res.makespan < best.makespan:
+            best = res
+        if verbose:
+            print(f"  k'={kp}: makespan={res.makespan:.2f}")
+    if best is not None:
+        best.runtime_s = time.perf_counter() - t0
+    return best
+
+
+def _run_single(
+    wf: Workflow,
+    platform: Platform,
+    kp: int,
+    exact_limit: int,
+) -> MappingResult | None:
+    # ---- Step 1: initial acyclic partition -------------------------- #
+    assignment = acyclic_partition(wf, kp)
+    groups: dict[int, list[int]] = {}
+    for u, b in enumerate(assignment):
+        groups.setdefault(b, []).append(u)
+    blocks = [groups[b] for b in sorted(groups)]
+
+    # ---- Step 2: biggest-first assignment --------------------------- #
+    step2 = _biggest_assign(wf, platform, blocks, exact_limit)
+    if not step2.assigned:
+        return None
+
+    # ---- Step 3: merge unassigned into assigned --------------------- #
+    block_of: list[int] = [-1] * wf.n
+    bid = 0
+    proc_of_bid: dict[int, int] = {}
+    for nodes, pj in step2.assigned:
+        for u in nodes:
+            block_of[u] = bid
+        proc_of_bid[bid] = pj
+        bid += 1
+    for nodes in step2.unassigned:
+        for u in nodes:
+            block_of[u] = bid
+        bid += 1
+    q = build_quotient(wf, block_of)
+    for vid, members in q.members.items():
+        b = block_of[next(iter(members))]
+        q.proc[vid] = proc_of_bid.get(b)
+
+    reqs = _Requirements(wf, exact_limit)
+    if not _merge_unassigned(wf, platform, q, reqs):
+        return None
+
+    # ---- Step 4: swaps + idle moves ---------------------------------- #
+    _swap_pass(wf, platform, q, reqs)
+    _idle_moves(wf, platform, q, reqs)
+
+    ms = compute_makespan(q, platform)
+    return MappingResult(
+        algo="DagHetPart",
+        quotient=q,
+        platform=platform,
+        makespan=ms,
+        runtime_s=0.0,
+        k_used=q.n_vertices,
+        extras={"k_prime": kp},
+    )

@@ -1,0 +1,63 @@
+"""Makespan computation via bottom weights (paper §3.3, Eqs. (1)–(2)).
+
+Bottom weight of a quotient vertex ν::
+
+    l_ν = w_ν / s_ν                                    if C_ν = ∅
+    l_ν = w_ν / s_ν + max_{ν'∈C_ν} ( c_{ν,ν'} / β + l_ν' )   otherwise
+
+where ``s_ν`` is the speed of the processor assigned to ν (1 when the
+vertex is still unassigned — the *estimated makespan* regime), and β the
+platform bandwidth.  The makespan of Γ is the maximum bottom weight.
+
+The critical path is the chain realizing that maximum; Step 3 of the
+heuristic avoids merging into it and Step 4's idle moves walk it.
+"""
+from __future__ import annotations
+
+from .dag import QuotientGraph
+from .platform import Platform
+
+__all__ = ["bottom_weights", "makespan", "critical_path"]
+
+
+def _speed(q: QuotientGraph, platform: Platform, v: int) -> float:
+    p = q.proc[v]
+    return platform.procs[p].speed if p is not None else 1.0
+
+
+def bottom_weights(q: QuotientGraph, platform: Platform) -> dict[int, float]:
+    """Bottom weight per quotient vertex (Eq. (1)). Γ must be acyclic."""
+    order = q.topological_order()
+    beta = platform.bandwidth
+    l: dict[int, float] = {}
+    for v in reversed(order):
+        own = q.weight[v] / _speed(q, platform, v)
+        if not q.succ[v]:
+            l[v] = own
+        else:
+            l[v] = own + max(
+                c / beta + l[w] for w, c in q.succ[v].items()
+            )
+    return l
+
+
+def makespan(q: QuotientGraph, platform: Platform) -> float:
+    """Makespan of Γ (Eq. (2)) — max bottom weight over vertices."""
+    if not q.members:
+        return 0.0
+    return max(bottom_weights(q, platform).values())
+
+
+def critical_path(q: QuotientGraph, platform: Platform) -> list[int]:
+    """The chain of quotient vertices realizing the makespan."""
+    if not q.members:
+        return []
+    l = bottom_weights(q, platform)
+    beta = platform.bandwidth
+    v = max(l, key=lambda x: l[x])
+    path = [v]
+    while q.succ[v]:
+        # child attaining the max in Eq. (1)
+        v = max(q.succ[v], key=lambda w: q.succ[v][w] / beta + l[w])
+        path.append(v)
+    return path

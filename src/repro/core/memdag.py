@@ -1,0 +1,221 @@
+"""Peak-memory traversal of (sub-)workflows — the paper's MemDag role.
+
+The paper computes a block's memory requirement ``r_{V_i}`` with MemDag
+(Kayaaslan et al. 2018): SP-ize the block, then find the traversal with
+minimum peak memory.  Exact minimum-peak traversal of a general DAG is
+NP-hard, so this module provides (DESIGN.md §3.3):
+
+* :func:`simulate_peak` — peak memory of a *given* sequential order,
+* :func:`exact_min_peak` — exact minimum over all topological orders via
+  DP on downward-closed subsets (used for blocks ≤ ``EXACT_LIMIT`` tasks
+  and as the oracle in property tests),
+* :func:`greedy_min_peak` — best-first heuristic for larger blocks,
+* :func:`block_requirement` — public entry point used by the heuristics.
+
+Memory model (sequential execution of one block on one processor):
+
+* an internal file ``c[u,v]`` occupies memory from the start of ``u``
+  until the completion of ``v``;
+* an *external input* (edge from another block) is materialized when its
+  consumer starts and freed when it completes (it streams in on demand);
+* an *external output* occupies memory while its producer runs and is
+  freed right after (it is sent to the consuming block's processor);
+* while task ``u`` runs, its own footprint ``m_u`` is added.
+
+Hence, with ``live(S)`` = Σ internal ``c[a,b]``, ``a ∈ S``, ``b ∉ S``::
+
+    mem_during(u, S) = live(S) + ext_in(u) + m_u + out_total(u)
+
+which is ``live(S)`` plus a per-task constant.  (``out_total`` counts
+internal and external outputs; internal inputs are already in ``live``.)
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Sequence
+
+from .dag import Workflow
+
+__all__ = [
+    "simulate_peak",
+    "exact_min_peak",
+    "greedy_min_peak",
+    "block_requirement",
+    "EXACT_LIMIT",
+]
+
+EXACT_LIMIT = 14
+
+
+def _constants(
+    sub: Workflow,
+    ext_in: dict[int, float],
+    ext_out: dict[int, float],
+) -> tuple[list[float], list[float]]:
+    """Per-task ``(during_const, live_delta)``.
+
+    ``during_const[u]``: what task ``u`` adds on top of ``live(S)`` while
+    it runs.  ``live_delta[u]``: change of the internal live set after
+    ``u`` completes (internal outputs appear, internal inputs freed).
+    """
+    during = [0.0] * sub.n
+    delta = [0.0] * sub.n
+    for u in range(sub.n):
+        int_in = sub.in_cost(u)
+        int_out = sub.out_cost(u)
+        during[u] = (
+            ext_in.get(u, 0.0) + sub.mem[u] + int_out + ext_out.get(u, 0.0)
+        )
+        delta[u] = int_out - int_in
+    return during, delta
+
+
+def simulate_peak(
+    sub: Workflow,
+    order: Sequence[int],
+    ext_in: dict[int, float] | None = None,
+    ext_out: dict[int, float] | None = None,
+) -> float:
+    """Peak memory of executing ``sub`` sequentially in ``order``."""
+    ext_in = ext_in or {}
+    ext_out = ext_out or {}
+    during, delta = _constants(sub, ext_in, ext_out)
+    live = 0.0
+    peak = 0.0
+    done = [False] * sub.n
+    for u in order:
+        if any(not done[p] for p in sub.pred[u]):
+            raise ValueError("order violates precedence constraints")
+        peak = max(peak, live + during[u])
+        live += delta[u]
+        done[u] = True
+    if not all(done):
+        raise ValueError("order does not cover the block")
+    return peak
+
+
+def exact_min_peak(
+    sub: Workflow,
+    ext_in: dict[int, float] | None = None,
+    ext_out: dict[int, float] | None = None,
+) -> float:
+    """Exact minimum peak memory over all topological orders (DP).
+
+    State: downward-closed subset ``S`` of executed tasks (bitmask).
+    ``live(S)`` only depends on ``S``, so
+    ``f(S) = min_{u ready into S} max(f(S \\ u), live(S \\ u) + during(u))``.
+    Exponential — gate on ``sub.n <= ~20`` at call sites.
+    """
+    ext_in = ext_in or {}
+    ext_out = ext_out or {}
+    n = sub.n
+    if n == 0:
+        return 0.0
+    during, delta = _constants(sub, ext_in, ext_out)
+    pred_mask = [0] * n
+    for v in range(n):
+        for p in sub.pred[v]:
+            pred_mask[v] |= 1 << p
+    full = (1 << n) - 1
+    # frontier DP over popcount layers; store live alongside to avoid
+    # recomputation (live is additive in deltas of members).
+    f: dict[int, float] = {0: 0.0}
+    live: dict[int, float] = {0: 0.0}
+    for _ in range(n):
+        nf: dict[int, float] = {}
+        nlive: dict[int, float] = {}
+        for S, peak in f.items():
+            lS = live[S]
+            for u in range(n):
+                bit = 1 << u
+                if S & bit or (pred_mask[u] & S) != pred_mask[u]:
+                    continue
+                S2 = S | bit
+                cand = max(peak, lS + during[u])
+                old = nf.get(S2)
+                if old is None or cand < old:
+                    nf[S2] = cand
+                    nlive[S2] = lS + delta[u]
+        f, live = nf, nlive
+    return f[full]
+
+
+def greedy_min_peak(
+    sub: Workflow,
+    ext_in: dict[int, float] | None = None,
+    ext_out: dict[int, float] | None = None,
+    return_order: bool = False,
+):
+    """Best-first heuristic traversal minimizing peak memory.
+
+    Two ready-heaps: tasks that *shrink* the live set (scheduled first,
+    by smallest transient footprint) and tasks that grow it.  Because
+    ``mem_during`` is ``live + const(u)``, ordering ready tasks by
+    ``const(u)`` is time-invariant, giving O(E log V).
+
+    A final *peak-shaving* pass re-simulates with the classic
+    "largest-freeing first among below-peak" tie-break and keeps the
+    better of the two traversals.
+    """
+    ext_in = ext_in or {}
+    ext_out = ext_out or {}
+    n = sub.n
+    if n == 0:
+        return (0.0, []) if return_order else 0.0
+    during, delta = _constants(sub, ext_in, ext_out)
+
+    def run(key) -> tuple[float, list[int]]:
+        indeg = [len(sub.pred[u]) for u in range(n)]
+        heap = [(key(u), u) for u in range(n) if indeg[u] == 0]
+        heapq.heapify(heap)
+        live = peak = 0.0
+        order: list[int] = []
+        while heap:
+            _, u = heapq.heappop(heap)
+            peak = max(peak, live + during[u])
+            live += delta[u]
+            order.append(u)
+            for v in sub.succ[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    heapq.heappush(heap, (key(v), v))
+        return peak, order
+
+    # variant 1: memory-freeing tasks first, then smallest footprint
+    p1, o1 = run(lambda u: (delta[u] >= 0, during[u], u))
+    # variant 2: smallest transient footprint outright
+    p2, o2 = run(lambda u: (during[u], delta[u], u))
+    peak, order = (p1, o1) if p1 <= p2 else (p2, o2)
+    return (peak, order) if return_order else peak
+
+
+def block_requirement(
+    wf: Workflow,
+    nodes: Sequence[int],
+    exact_limit: int = EXACT_LIMIT,
+    return_order: bool = False,
+):
+    """Memory requirement ``r_{V_i}`` of a block of ``wf``.
+
+    Cross-block edges contribute as external inputs/outputs per the
+    module-level memory model.
+    """
+    nodes = list(nodes)
+    sub, mapping = wf.subgraph(nodes)
+    ext_in, ext_out = wf.boundary_costs(nodes)
+    # persistent residency (placement layer: weights/caches) adds a
+    # traversal-independent base to the block's requirement
+    base = sum(wf.persistent[u] for u in nodes)
+    if sub.n <= exact_limit:
+        peak = base + exact_min_peak(sub, ext_in, ext_out)
+        if not return_order:
+            return peak
+        # exact DP does not retain the order; fall back to the greedy
+        # order (whose simulated peak may be slightly above ``peak``).
+        _, order = greedy_min_peak(sub, ext_in, ext_out, return_order=True)
+        return peak, [mapping[i] for i in order]
+    result = greedy_min_peak(sub, ext_in, ext_out, return_order=return_order)
+    if return_order:
+        peak, order = result
+        return base + peak, [mapping[i] for i in order]
+    return base + result

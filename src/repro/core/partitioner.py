@@ -1,0 +1,205 @@
+"""Acyclic DAG partitioning — stand-in for dagP (paper Step 1).
+
+The paper uses the external multilevel partitioner dagP (Herrmann et
+al., SISC 2019) as a black box: ``Partition(G, k)`` returns an acyclic
+k-way partition optimizing edge cut under a balance constraint.  We
+implement the same interface natively (DESIGN.md §3.4):
+
+1. a *locality-preserving topological order* (ready tasks whose parents
+   were scheduled most recently go first — keeps chains together),
+2. a *contiguous split* of that order into ``k`` chunks of roughly equal
+   vertex weight — by construction every edge goes from an
+   earlier-or-equal chunk to a later-or-equal chunk, so the quotient
+   graph is acyclic,
+3. *FM-style boundary refinement*: single-vertex moves between
+   neighbouring chunks that reduce the edge cut, constrained so the
+   ``b(u) <= b(v)`` invariant (and hence acyclicity) is preserved and
+   blocks stay within ``(1 + eps)`` of the weight target.
+
+The refinement is repeated for ``passes`` rounds of best-improvement
+sweeps.  Deterministic throughout.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from .dag import Workflow
+
+__all__ = ["acyclic_partition", "partition_block", "edge_cut"]
+
+
+def _locality_topo_order(wf: Workflow) -> list[int]:
+    """Kahn's algorithm, ready tasks keyed by most-recent parent."""
+    import heapq
+
+    indeg = [len(wf.pred[u]) for u in range(wf.n)]
+    pos = [-1] * wf.n  # scheduling position of each task
+    # key: (-last_parent_position, task id)  → children follow parents
+    heap = [(0, u) for u in range(wf.n) if indeg[u] == 0]
+    heapq.heapify(heap)
+    order: list[int] = []
+    while heap:
+        _, u = heapq.heappop(heap)
+        pos[u] = len(order)
+        order.append(u)
+        for v in wf.succ[u]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                last = max(pos[p] for p in wf.pred[v])
+                heapq.heappush(heap, (-last, v))
+    if len(order) != wf.n:
+        raise ValueError("cannot partition a cyclic graph")
+    return order
+
+
+def edge_cut(wf: Workflow, block_of: Sequence[int]) -> float:
+    """Total weight of edges crossing blocks."""
+    return sum(
+        c
+        for u in range(wf.n)
+        for v, c in wf.succ[u].items()
+        if block_of[u] != block_of[v]
+    )
+
+
+def acyclic_partition(
+    wf: Workflow,
+    k: int,
+    *,
+    eps: float = 0.2,
+    passes: int = 4,
+) -> list[int]:
+    """Acyclic ``k``-way partition of ``wf`` (block ids ``0..k'-1``).
+
+    May return fewer than ``k`` non-empty blocks when ``wf.n < k``
+    (paper: the partitioner cannot always reach the requested count).
+    Block ids respect topological order: for every edge ``(u, v)``,
+    ``block_of[u] <= block_of[v]``.
+    """
+    n = wf.n
+    if n == 0:
+        return []
+    k = max(1, min(k, n))
+    order = _locality_topo_order(wf)
+    total = sum(wf.work[u] for u in order) or float(n)
+    target = total / k
+
+    # --- contiguous split by cumulative work -------------------------- #
+    block_of = [0] * n
+    b = 0
+    acc = 0.0
+    remaining = n
+    for idx, u in enumerate(order):
+        wu = wf.work[u] if total != float(n) else 1.0
+        # close the block if the next task overshoots the target, but
+        # keep enough tasks to make all remaining blocks non-empty.
+        # open block b+1 only if the remaining tasks (incl. this one)
+        # can still populate blocks b+1 .. k-1 with ≥1 task each.
+        if (
+            b < k - 1
+            and acc > 0.0
+            and acc + wu > target * 1.0001
+            and remaining >= (k - 1 - b)
+        ):
+            b += 1
+            acc = 0.0
+        block_of[u] = b
+        acc += wu
+        remaining -= 1
+    k_eff = b + 1
+
+    if k_eff <= 1:
+        return block_of
+
+    # --- FM-style boundary refinement --------------------------------- #
+    weights = [0.0] * k_eff
+    for u in range(n):
+        weights[block_of[u]] += wf.work[u]
+    cap = (1.0 + eps) * (total / k_eff)
+
+    def gain(u: int, dst: int) -> float:
+        src = block_of[u]
+        g = 0.0
+        for v, c in wf.succ[u].items():
+            if block_of[v] == dst:
+                g += c
+            elif block_of[v] == src:
+                g -= c
+        for v, c in wf.pred[u].items():
+            if block_of[v] == dst:
+                g += c
+            elif block_of[v] == src:
+                g -= c
+        return g
+
+    for _ in range(passes):
+        improved = False
+        for u in range(n):
+            src = block_of[u]
+            for dst in (src - 1, src + 1):
+                if dst < 0 or dst >= k_eff:
+                    continue
+                # acyclicity: moving down needs no pred in src;
+                # moving up needs no succ in src.
+                if dst < src and any(block_of[p] >= src for p in wf.pred[u]):
+                    continue
+                if dst > src and any(block_of[s] <= src for s in wf.succ[u]):
+                    continue
+                g = gain(u, dst)
+                if g <= 0.0:
+                    continue
+                if weights[dst] + wf.work[u] > cap:
+                    continue
+                # don't empty a block (keeps k' stable during refinement)
+                if weights[src] - wf.work[u] <= 0.0 and sum(
+                    1 for x in range(n) if block_of[x] == src
+                ) <= 1:
+                    continue
+                block_of[u] = dst
+                weights[src] -= wf.work[u]
+                weights[dst] += wf.work[u]
+                improved = True
+                break
+        if not improved:
+            break
+
+    # compress ids in case refinement emptied a block entirely
+    used = sorted(set(block_of))
+    remap = {b: i for i, b in enumerate(used)}
+    return [remap[b] for b in block_of]
+
+
+def partition_block(
+    wf: Workflow,
+    nodes: Sequence[int],
+    parts: int,
+    *,
+    eps: float = 0.2,
+) -> list[list[int]]:
+    """Partition a block of ``wf`` into up to ``parts`` sub-blocks.
+
+    Used by the heuristic's FitBlock (paper Algorithm 2).  Returns the
+    sub-blocks as lists of *original* task ids (≥ 1 sub-blocks; may be
+    fewer than ``parts`` for tiny blocks, may be more only never —
+    unlike dagP we control the split exactly, but callers still treat
+    the result as "one or more blocks").
+    """
+    nodes = list(nodes)
+    if len(nodes) <= 1 or parts <= 1:
+        return [nodes]
+    sub, mapping = wf.subgraph(nodes)
+    assignment = acyclic_partition(sub, parts, eps=eps)
+    groups: dict[int, list[int]] = {}
+    for i, b in enumerate(assignment):
+        groups.setdefault(b, []).append(mapping[i])
+    if len(groups) == 1:
+        # safety net: callers (FitBlock) rely on strict progress — fall
+        # back to a topological midpoint split.
+        order = _locality_topo_order(sub)
+        half = len(order) // 2
+        first = {order[i] for i in range(half)}
+        return [
+            [mapping[i] for i in sorted(first)],
+            [mapping[i] for i in range(sub.n) if i not in first],
+        ]
+    return [groups[b] for b in sorted(groups)]

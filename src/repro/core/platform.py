@@ -1,0 +1,192 @@
+"""Heterogeneous execution environments (paper §3.2 + §5.1.2).
+
+A platform is a set of processors, each with an individual memory size
+``M_j`` and speed ``s_j``, plus a uniform interconnect bandwidth ``β``.
+
+Ships the paper's experimental clusters (Tables 2–3) and TPU-fleet
+presets used by the framework's placement layer, where a "processor" is
+a TPU chip or a model-parallel group acting as one memory domain.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+__all__ = [
+    "Processor",
+    "Platform",
+    "default_cluster",
+    "small_cluster",
+    "large_cluster",
+    "more_het_cluster",
+    "less_het_cluster",
+    "no_het_cluster",
+    "tpu_fleet",
+]
+
+
+@dataclass(frozen=True)
+class Processor:
+    name: str
+    speed: float   # normalized ops/s (paper: GHz); TPU preset: TFLOP/s
+    memory: float  # normalized units (paper: GB); TPU preset: GiB HBM
+
+
+@dataclass
+class Platform:
+    """Computing system S with k processors and uniform bandwidth β."""
+
+    procs: list[Processor]
+    bandwidth: float = 1.0
+    name: str = "cluster"
+
+    @property
+    def k(self) -> int:
+        return len(self.procs)
+
+    def speed(self, j: int) -> float:
+        return self.procs[j].speed
+
+    def memory(self, j: int) -> float:
+        return self.procs[j].memory
+
+    def sorted_by_memory(self) -> list[int]:
+        """Processor indices by decreasing memory (ties: faster first)."""
+        return sorted(
+            range(self.k),
+            key=lambda j: (-self.procs[j].memory, -self.procs[j].speed),
+        )
+
+    def max_memory(self) -> float:
+        return max(p.memory for p in self.procs)
+
+    def min_memory(self) -> float:
+        return min(p.memory for p in self.procs)
+
+    def with_bandwidth(self, beta: float) -> "Platform":
+        return Platform(list(self.procs), beta, f"{self.name}@beta={beta}")
+
+    def without(self, failed: set[int]) -> "Platform":
+        """Platform after losing processors ``failed`` (elastic rescale)."""
+        procs = [p for j, p in enumerate(self.procs) if j not in failed]
+        return Platform(procs, self.bandwidth, f"{self.name}-degraded")
+
+
+# ---------------------------------------------------------------------- #
+# Paper clusters (§5.1.2).  (name, speed GHz, memory GB)
+# ---------------------------------------------------------------------- #
+_DEFAULT_KINDS = [
+    ("local", 4.0, 16.0),
+    ("A1", 32.0, 32.0),
+    ("A2", 6.0, 64.0),
+    ("N1", 12.0, 16.0),
+    ("N2", 8.0, 8.0),
+    ("C2", 32.0, 192.0),
+]
+
+_MORE_HET_KINDS = [
+    ("local*", 2.0, 8.0),
+    ("A1*", 64.0, 64.0),
+    ("A2*", 3.0, 128.0),
+    ("N1*", 24.0, 8.0),
+    ("N2*", 4.0, 4.0),
+    ("C2*", 64.0, 384.0),
+]
+
+_LESS_HET_KINDS = [
+    ("local'", 8.0, 64.0),
+    ("A1'", 16.0, 64.0),
+    ("A2'", 12.0, 128.0),
+    ("N1'", 12.0, 64.0),
+    ("N2'", 16.0, 32.0),
+    ("C2'", 16.0, 192.0),
+]
+
+
+def _build(kinds, copies: int, beta: float, name: str) -> Platform:
+    procs = [
+        Processor(f"{kind}-{i}", s, m)
+        for kind, s, m in kinds
+        for i in range(copies)
+    ]
+    return Platform(procs, beta, name)
+
+
+def default_cluster(beta: float = 1.0) -> Platform:
+    """36 nodes: six of each kind of Table 2."""
+    return _build(_DEFAULT_KINDS, 6, beta, "default")
+
+
+def small_cluster(beta: float = 1.0) -> Platform:
+    """18 nodes: three of each kind."""
+    return _build(_DEFAULT_KINDS, 3, beta, "small")
+
+
+def large_cluster(beta: float = 1.0) -> Platform:
+    """60 nodes: ten of each kind."""
+    return _build(_DEFAULT_KINDS, 10, beta, "large")
+
+
+def more_het_cluster(beta: float = 1.0) -> Platform:
+    return _build(_MORE_HET_KINDS, 6, beta, "MoreHet")
+
+
+def less_het_cluster(beta: float = 1.0) -> Platform:
+    return _build(_LESS_HET_KINDS, 6, beta, "LessHet")
+
+
+def no_het_cluster(beta: float = 1.0) -> Platform:
+    """Homogeneous: every node must hold the most demanding task → all C2."""
+    procs = [Processor(f"C2-{i}", 32.0, 192.0) for i in range(36)]
+    return Platform(procs, beta, "NoHet")
+
+
+# ---------------------------------------------------------------------- #
+# TPU fleet presets (framework placement layer).
+#
+# speed = effective bf16 TFLOP/s per chip; memory = usable HBM GiB
+# (hardware minus ~1.5 GiB runtime reserve).  Mixed-generation fleets are
+# the realistic source of heterogeneity for the paper's algorithm; the
+# "degraded" entries model chips sharing a host with a noisy neighbour
+# (straggler mitigation treats them as slower processors rather than
+# excluding them).
+# ---------------------------------------------------------------------- #
+_TPU_KINDS = {
+    "v5e": Processor("v5e", 197.0, 14.5),
+    "v5p": Processor("v5p", 459.0, 93.0),
+    "v4": Processor("v4", 275.0, 30.5),
+    "v5e-degraded": Processor("v5e-degraded", 138.0, 12.0),
+}
+
+
+def tpu_fleet(
+    spec: dict[str, int] | None = None,
+    *,
+    ici_gbps: float = 50.0,
+) -> Platform:
+    """Build a (possibly mixed-generation) TPU fleet.
+
+    ``spec`` maps kind → count, e.g. ``{"v5e": 192, "v4": 64}``.
+    Bandwidth is ICI GB/s per link — the uniform-β assumption of the
+    paper, kept deliberately (see DESIGN.md §3.2).
+    """
+    if spec is None:
+        spec = {"v5e": 224, "v4": 24, "v5e-degraded": 8}
+    procs = []
+    for kind, count in spec.items():
+        base = _TPU_KINDS[kind]
+        procs.extend(
+            replace(base, name=f"{base.name}-{i}") for i in range(count)
+        )
+    return Platform(procs, ici_gbps, "tpu-fleet")
+
+
+def tpu_fleet_si(spec: dict[str, int] | None = None, *,
+                 ici_gbps: float = 50.0) -> Platform:
+    """Like :func:`tpu_fleet` but in SI units (FLOP/s, bytes, bytes/s)
+    — the units :mod:`repro.core.modelgraph` emits."""
+    base = tpu_fleet(spec, ici_gbps=ici_gbps)
+    procs = [
+        Processor(p.name, p.speed * 1e12, p.memory * 2**30)
+        for p in base.procs
+    ]
+    return Platform(procs, ici_gbps * 1e9, base.name)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, Prefetcher, SyntheticTokens, host_slice
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticTokens", "host_slice"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots placed by the
+scheduler: flash attention and the RWKV6 WKV recurrence.
+
+Each kernel ships with a pure-jnp oracle (:mod:`ref`) and a jit'd
+wrapper (:mod:`ops`); tests sweep shapes/dtypes in interpret mode."""
+from .ops import flash_attention, rwkv_wkv
+from .ref import reference_attention, reference_wkv
+
+__all__ = ["flash_attention", "rwkv_wkv",
+           "reference_attention", "reference_wkv"]

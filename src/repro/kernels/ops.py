@@ -1,0 +1,45 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU these call the Mosaic-compiled kernels; elsewhere callers pass
+``interpret=True`` (tests) or use the oracles in :mod:`ref` (the model
+code's chunked-jnp paths are mathematically the same algorithms).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .rwkv_wkv import wkv_bhsd
+
+__all__ = ["flash_attention", "rwkv_wkv"]
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """Flash attention in model layout. q [B,S,H,hd]; k/v [B,S,Hkv,hd]."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    o = flash_attention_bhsd(qf, kf, vf, causal=causal, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    return o.reshape(b, hq, s, hd).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv_wkv(r, k, v, w, u, s0=None, *, chunk: int = 128,
+             interpret: bool = False):
+    """WKV recurrence in model layout. r/k/v/w [B,S,H,hd]; u [H,hd]."""
+    b, s, h, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    out, sT = wkv_bhsd(tr(r), tr(k), tr(v), tr(w), u, s0, chunk=chunk,
+                       interpret=interpret)
+    return out.transpose(0, 2, 1, 3), sT

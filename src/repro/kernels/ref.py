@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth the
+kernels must reproduce, and the lowering used on non-TPU backends)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["reference_attention", "reference_wkv"]
+
+
+def reference_attention(q, k, v, *, causal: bool = True) -> jax.Array:
+    """Naive softmax attention. q [BH,S,hd]; k/v [BHkv,S,hd]."""
+    bh, s, hd = q.shape
+    group = bh // k.shape[0]
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def reference_wkv(r, k, v, w, u, s0):
+    """Sequential WKV oracle. r/k/v/w [B,H,S,hd]; u [H,hd]; s0 [B,H,hd,hd]."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                        # [B,H,hd]
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        return state * wt[..., :, None] + kv, out
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (rf, kf, vf, wf))
+    sT, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return outs.transpose(1, 2, 0, 3).astype(r.dtype), sT

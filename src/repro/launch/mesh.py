@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required because smoke tests
+run with the single real CPU device while the dry-run requests 512
+placeholder devices before its first jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "MESH_AXES"]
+
+MESH_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod 16×16 = 256 chips, or 2-pod 2×16×16 = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch: ('pod', 'data') when present."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,293 @@
+"""Step builders: jit-able train_step / serve_step per (arch × shape),
+with input specs (ShapeDtypeStruct stand-ins) and sharding assignments.
+
+This is the module both the real drivers (train.py / serve.py) and the
+multi-pod dry-run consume; the dry-run lowers exactly what training
+would run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig, get_config, shape_by_name
+from repro.models import LM
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+from .sharding import (
+    batch_sharding,
+    cache_shardings,
+    frontend_sharding,
+    make_shard_act,
+    param_sharding_rules,
+    pick_policy,
+    tree_shardings,
+)
+
+__all__ = ["StepBundle", "build_train_step", "build_serve_step",
+           "make_model", "train_input_specs", "decode_input_specs"]
+
+
+@dataclass
+class StepBundle:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+    arch: str
+    shape: ShapeConfig
+    mesh: Any
+    model: LM
+    step_fn: Any              # jitted function
+    input_specs: dict         # kwargs of ShapeDtypeStruct for .lower()
+    policy: str
+    notes: dict
+
+
+def make_model(cfg: ModelConfig, shape: ShapeConfig, mesh=None, *,
+               remat: str | None = None, attn_chunk: int = 512,
+               rwkv_chunk: int = 16, kv_dtype: str = "bf16",
+               policy: str = "fsdp_tp",
+               param_dtype=jnp.bfloat16) -> LM:
+    if remat is None:
+        remat = "full" if shape.kind == "train" else "none"
+    shard_act = (make_shard_act(mesh, policy)
+                 if mesh is not None else None)
+    return LM(
+        cfg,
+        param_dtype=param_dtype,
+        attn_chunk=attn_chunk,
+        max_seq=shape.seq_len + 8,
+        remat=remat,
+        shard_act=shard_act,
+        rwkv_chunk=rwkv_chunk,
+        kv_dtype=kv_dtype,
+    )
+
+
+# ---------------------------------------------------------------------- #
+# input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ---------------------------------------------------------------------- #
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      policy: str = "fsdp_tp") -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    bsh = batch_sharding(mesh, shape.global_batch, policy)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsh),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsh),
+    }
+    if cfg.frontend_tokens:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16,
+            sharding=frontend_sharding(mesh, shape.global_batch))
+    return batch
+
+
+def _prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    bsh = batch_sharding(mesh, shape.global_batch)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsh),
+    }
+    if cfg.frontend_tokens:
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16,
+            sharding=frontend_sharding(mesh, shape.global_batch))
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       model: LM) -> dict:
+    """serve_step inputs: one new token + KV/state cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(b, s, dtype=jnp.bfloat16))
+    cshard = cache_shardings(cache_shapes, mesh, b)
+    cache = jax.tree.map(
+        lambda l, sh: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=sh),
+        cache_shapes, cshard)
+    bsh = batch_sharding(mesh, shape.global_batch)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=bsh),
+        "cache": cache,
+    }
+    if cfg.frontend_tokens:
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=frontend_sharding(mesh, shape.global_batch))
+    return specs
+
+
+# ---------------------------------------------------------------------- #
+# step functions
+# ---------------------------------------------------------------------- #
+def build_train_step(arch: str, shape_name: str, mesh, *,
+                     policy: str | None = None,
+                     opt: AdamWConfig | None = None,
+                     cfg: ModelConfig | None = None,
+                     attn_chunk: int = 512,
+                     rwkv_chunk: int = 16,
+                     moment_dtype: str = "float32",
+                     grad_accum: int = 1,
+                     remat: str | None = None) -> StepBundle:
+    """jit'd (params, opt_state, batch, step) -> (params, opt_state,
+    metrics), with in/out shardings bound from the rules.
+
+    ``grad_accum`` > 1 splits the global batch into microbatches with
+    gradient accumulation (scanned) — activation temps scale ~1/µ at
+    the cost of a bf16 grad accumulator; the way 100B+ models train on
+    16 GiB chips.
+    """
+    cfg = cfg or get_config(arch)
+    shape = shape_by_name(shape_name)
+    opt = opt or AdamWConfig(moment_dtype=moment_dtype)
+    policy = policy or pick_policy(cfg.total_params())
+    model = make_model(cfg, shape, mesh, remat=remat, policy=policy,
+                       attn_chunk=attn_chunk, rwkv_chunk=rwkv_chunk)
+
+    param_shapes = jax.eval_shape(lambda: model.init(0))
+    pshard = tree_shardings(param_shapes, mesh, policy)
+    opt_shapes = jax.eval_shape(
+        lambda p: adamw_init(p, opt.moment_dtype), param_shapes)
+    oshard = {
+        "step": NamedSharding(mesh, P()),
+        "m": pshard, "v": pshard, "master": pshard,
+    }
+    if shape.global_batch % grad_accum:
+        raise ValueError("global batch not divisible by grad_accum")
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum,
+                                     x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(model.loss)(params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                    gacc, g)
+                return (gacc, lacc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+        lr_scale = warmup_cosine(opt_state["step"])
+        params, opt_state, metrics = adamw_update(
+            opt, params, grads, opt_state, lr_scale)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    batch_specs = train_input_specs(cfg, shape, mesh, policy)
+    step_fn = jax.jit(
+        train_step,
+        in_shardings=(pshard, oshard,
+                      jax.tree.map(lambda s: s.sharding, batch_specs)),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1),
+    )
+    specs = {
+        "params": jax.tree.map(
+            lambda l, sh: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=sh),
+            param_shapes, pshard),
+        "opt_state": jax.tree.map(
+            lambda l, sh: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=sh),
+            opt_shapes, oshard),
+        "batch": batch_specs,
+    }
+    return StepBundle(arch, shape, mesh, model, step_fn, specs, policy,
+                      notes={"remat": model.remat})
+
+
+def build_serve_step(arch: str, shape_name: str, mesh, *,
+                     policy: str | None = None,
+                     cfg: ModelConfig | None = None,
+                     attn_chunk: int = 512,
+                     kv_dtype: str = "bf16") -> StepBundle:
+    """jit'd serve_step: decode one token against the cache (decode
+    shapes) — the lowered object for decode_32k / long_500k cells."""
+    cfg = cfg or get_config(arch)
+    shape = shape_by_name(shape_name)
+    policy = policy or pick_policy(cfg.total_params())
+    model = make_model(cfg, shape, mesh, remat="none",
+                       attn_chunk=attn_chunk, kv_dtype=kv_dtype)
+
+    param_shapes = jax.eval_shape(lambda: model.init(0))
+    pshard = tree_shardings(param_shapes, mesh, policy)
+    in_specs = decode_input_specs(cfg, shape, mesh, model)
+
+    if cfg.frontend_tokens:
+        def serve_step(params, cache, tokens, memory):
+            return model.decode_step(params, cache, tokens,
+                                     shape.seq_len - 1, memory=memory)
+    else:
+        def serve_step(params, cache, tokens):
+            return model.decode_step(params, cache, tokens,
+                                     shape.seq_len - 1)
+
+    cache_sh = jax.tree.map(lambda s: s.sharding, in_specs["cache"])
+    shardings = [pshard, cache_sh, in_specs["tokens"].sharding]
+    if cfg.frontend_tokens:
+        shardings.append(in_specs["memory"].sharding)
+    step_fn = jax.jit(
+        serve_step,
+        in_shardings=tuple(shardings),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    specs = {
+        "params": jax.tree.map(
+            lambda l, sh: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=sh),
+            param_shapes, pshard),
+        "cache": in_specs["cache"],
+        "tokens": in_specs["tokens"],
+    }
+    if cfg.frontend_tokens:
+        specs["memory"] = in_specs["memory"]
+    return StepBundle(arch, shape, mesh, model, step_fn, specs, policy,
+                      notes={})
+
+
+def build_prefill_step(arch: str, shape_name: str, mesh, *,
+                       policy: str | None = None,
+                       cfg: ModelConfig | None = None,
+                       attn_chunk: int = 512) -> StepBundle:
+    """jit'd prefill: forward logits over the full sequence."""
+    cfg = cfg or get_config(arch)
+    shape = shape_by_name(shape_name)
+    policy = policy or pick_policy(cfg.total_params())
+    model = make_model(cfg, shape, mesh, remat="none",
+                       attn_chunk=attn_chunk)
+    param_shapes = jax.eval_shape(lambda: model.init(0))
+    pshard = tree_shardings(param_shapes, mesh, policy)
+    in_specs = _prefill_input_specs(cfg, shape, mesh)
+
+    if cfg.frontend_tokens:
+        def prefill(params, tokens, frontend):
+            logits, _ = model.forward(params, tokens, frontend,
+                                      last_only=True)
+            return logits[:, -1]
+        shardings = (pshard, in_specs["tokens"].sharding,
+                     in_specs["frontend"].sharding)
+    else:
+        def prefill(params, tokens):
+            logits, _ = model.forward(params, tokens, last_only=True)
+            return logits[:, -1]
+        shardings = (pshard, in_specs["tokens"].sharding)
+
+    step_fn = jax.jit(prefill, in_shardings=shardings, out_shardings=None)
+    specs = {
+        "params": jax.tree.map(
+            lambda l, sh: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=sh),
+            param_shapes, pshard),
+        **in_specs,
+    }
+    return StepBundle(arch, shape, mesh, model, step_fn, specs, policy,
+                      notes={})

@@ -1,0 +1,67 @@
+"""Training launcher.
+
+Two modes:
+
+* ``--smoke`` (default on CPU): reduced config of the selected arch,
+  runs real steps through the fault-tolerant Trainer.
+* ``--production``: builds the full-size bundle against the production
+  mesh and lowers it (the execution path used on real TPU slices; on
+  this host it verifies the program end-to-end up to compilation).
+
+Examples::
+
+    python -m repro.launch.train --arch llama3_8b --steps 50
+    python -m repro.launch.train --arch mixtral_8x7b --production \
+        --shape train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.configs import get_config, get_smoke_config, shape_by_name
+from repro.configs.base import ShapeConfig
+from repro.runtime import FailureInjector, Trainer, TrainerConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--production", action="store_true")
+    ap.add_argument("--inject-fault-at", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.production:
+        # full config, production mesh, lower + compile (no execution
+        # on this CPU host; on TPU this object is what runs)
+        from repro.launch.dryrun import run_cell
+        result = run_cell(args.arch, args.shape, multi_pod=False)
+        return 0 if result["status"] == "ok" else 1
+
+    cfg = get_smoke_config(args.arch)
+    shape = ShapeConfig("smoke_train", args.seq_len, args.batch, "train")
+    injector = None
+    if args.inject_fault_at is not None:
+        injector = FailureInjector(fail_at_steps=(args.inject_fault_at,))
+    trainer = Trainer(
+        cfg, shape,
+        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir),
+        attn_chunk=16,
+        injector=injector,
+    )
+    hist = trainer.run()
+    print(f"steps: {len(hist['loss'])}  "
+          f"first loss: {hist['loss'][0]:.4f}  "
+          f"last loss: {hist['loss'][-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

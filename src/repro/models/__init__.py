@@ -1,0 +1,4 @@
+"""Model zoo: one unified functional LM covering all assigned archs."""
+from .transformer import LM, LayerSpec
+
+__all__ = ["LM", "LayerSpec"]

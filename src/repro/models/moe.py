@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN — capacity-based expert-choice gather.
+
+TPU-idiomatic MoE without giant one-hot dispatch einsums and without
+ragged ops: tokens are routed per *group* (a group = one sequence, so
+routing stays local under batch sharding), each expert gathers its
+top-C tokens (C = tokens·top_k·capacity_factor / E), computes a batched
+SwiGLU, and results are scatter-added back.  Tokens over capacity are
+dropped (standard dropped-token MoE; capacity_factor 1.25 ⇒ ≲2% drops
+at equilibrium).  Compute cost is capacity_factor × active-FLOPs — the
+roofline accounting in benchmarks uses the same convention.
+
+Gradients flow through gathers, scatter-add and gate values.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_moe", "moe_ffn", "moe_capacity"]
+
+
+def moe_capacity(tokens_per_group: int, n_experts: int, top_k: int,
+                 capacity_factor: float = 1.25) -> int:
+    c = int(tokens_per_group * top_k * capacity_factor / n_experts)
+    return max(1, min(c, tokens_per_group))
+
+
+def init_moe(init, d_model: int, d_ff: int, n_experts: int) -> dict:
+    return {
+        "router": init.normal((d_model, n_experts), fan_in=d_model),
+        "w_gate": init.normal((n_experts, d_model, d_ff), fan_in=d_model),
+        "w_up": init.normal((n_experts, d_model, d_ff), fan_in=d_model),
+        "w_down": init.normal((n_experts, d_ff, d_model), fan_in=d_ff),
+    }
+
+
+def moe_ffn(params: dict, x: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25,
+            shard=None) -> tuple[jax.Array, jax.Array]:
+    """Apply the MoE FFN.
+
+    x: [G, T, d] (G groups routed independently — callers pass
+    [batch, seq, d] for train/prefill and [1, batch, d] for decode).
+    Returns ``(y, aux_loss)`` where ``aux_loss`` is the load-balancing
+    loss (Switch-style, mean over groups).
+
+    ``shard(tensor, kind)`` pins the sharding of the big gather
+    intermediates; without it GSPMD may resolve the expert-einsum
+    contraction conflict by *replicating* the [G, E, C, d] tensors
+    across the data axes (measured: 31 GiB/device for mixtral train_4k)
+    instead of gathering the (much smaller) expert weights.
+    """
+    shard = shard or (lambda v, kind: v)
+    g, t, d = x.shape
+    e = params["router"].shape[1]
+    cap = moe_capacity(t, e, top_k, capacity_factor)
+
+    logits = jnp.einsum("gtd,de->gte", x, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # [G,T,E]
+
+    # token-choice top-k, renormalized (Mixtral convention)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)              # [G,T,k]
+    top_vals = top_vals / jnp.maximum(
+        top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # per-(token, expert) gate value; 0 when the expert is not in the
+    # token's top-k.  [G, T, E]
+    routed = jnp.zeros((g, t, e), jnp.float32)
+    routed = jax.vmap(
+        lambda r, i, v: r.at[jnp.arange(t)[:, None], i].set(v)
+    )(routed, top_idx, top_vals)
+
+    # expert-choice capacity selection: each expert picks its top-C
+    # tokens by gate value.  [G, E, C]
+    scores = routed.transpose(0, 2, 1)                           # [G,E,T]
+    sel_vals, sel_tok = jax.lax.top_k(scores, cap)
+    valid = sel_vals > 0.0
+    weights = (sel_vals * valid).astype(x.dtype)                 # [G,E,C]
+
+    # gather token activations per expert slot: [G, E, C, d]
+    xs = jnp.take_along_axis(
+        x[:, None, :, :],                                        # [G,1,T,d]
+        sel_tok[..., None],                                      # [G,E,C,1]
+        axis=2,
+    )
+    xs = shard(xs, "moe_tokens")
+
+    # batched SwiGLU over experts
+    h_gate = jnp.einsum("gecd,edf->gecf", xs, params["w_gate"].astype(x.dtype))
+    h_up = jnp.einsum("gecd,edf->gecf", xs, params["w_up"].astype(x.dtype))
+    h = shard(jax.nn.silu(h_gate) * h_up, "moe_hidden")
+    ys = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    ys = shard(ys * weights[..., None], "moe_tokens")
+
+    # scatter-add back to token positions
+    y = jnp.zeros((g, t, d), ys.dtype)
+    y = jax.vmap(
+        lambda acc, tok, val: acc.at[tok.reshape(-1)].add(
+            val.reshape(-1, d))
+    )(y, sel_tok, ys)
+
+    # Switch load-balancing loss: E * sum_e f_e * p_e
+    frac_routed = (routed > 0).astype(jnp.float32).mean(axis=1)  # [G,E]
+    mean_prob = probs.mean(axis=1)                               # [G,E]
+    aux = e * jnp.mean(jnp.sum(frac_routed * mean_prob, axis=-1))
+    return y.astype(x.dtype), aux

@@ -1,0 +1,204 @@
+"""RWKV6 "Finch" block — time-mix with data-dependent decay.
+
+Per head (size ``hd``), with state S ∈ R^{hd×hd}::
+
+    out_t = r_t · (S + (u ⊙ k_t) v_tᵀ)
+    S     = diag(w_t) S + k_t v_tᵀ,   w_t = exp(-exp(ww_t))
+
+``ww_t`` is data-dependent (low-rank LoRA on the shifted input) — the
+defining RWKV6 feature.  Sequence processing scans over chunks; the
+Pallas kernel in ``repro.kernels.rwkv_wkv`` is the TPU-target version
+of the same recurrence (kernels/ref.py mirrors this module).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_rwkv", "rwkv_seq", "rwkv_step", "init_rwkv_cache",
+           "wkv_scan_ref"]
+
+_LORA = 64
+
+
+def init_rwkv(init, d_model: int, n_heads: int, head_dim: int) -> dict:
+    dh = n_heads * head_dim
+    return {
+        "mix_r": init.ones((d_model,)) * 0.5,
+        "mix_k": init.ones((d_model,)) * 0.5,
+        "mix_v": init.ones((d_model,)) * 0.5,
+        "mix_w": init.ones((d_model,)) * 0.5,
+        "mix_g": init.ones((d_model,)) * 0.5,
+        "w_r": init.normal((d_model, dh), fan_in=d_model),
+        "w_k": init.normal((d_model, dh), fan_in=d_model),
+        "w_v": init.normal((d_model, dh), fan_in=d_model),
+        "w_g": init.normal((d_model, dh), fan_in=d_model),
+        "w_o": init.normal((dh, d_model), fan_in=dh),
+        # data-dependent decay LoRA
+        "decay_a": init.normal((d_model, _LORA), fan_in=d_model),
+        "decay_b": init.normal((_LORA, dh), fan_in=_LORA),
+        "decay_base": init.zeros((dh,)),
+        "bonus_u": init.normal((n_heads, head_dim), fan_in=head_dim),
+        "ln_x": init.ones((dh,)),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros / cache for t = 0)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _projections(params, x, x_prev, n_heads, head_dim):
+    btype = x.dtype
+
+    def mix(name):
+        m = params[f"mix_{name}"].astype(btype)
+        return x * m + x_prev * (1.0 - m)
+
+    b, s, _ = x.shape
+    shp = (b, s, n_heads, head_dim)
+    r = jnp.einsum("bsd,de->bse", mix("r"), params["w_r"].astype(btype)).reshape(shp)
+    k = jnp.einsum("bsd,de->bse", mix("k"), params["w_k"].astype(btype)).reshape(shp)
+    v = jnp.einsum("bsd,de->bse", mix("v"), params["w_v"].astype(btype)).reshape(shp)
+    g = jnp.einsum("bsd,de->bse", mix("g"), params["w_g"].astype(btype))
+    ww = jnp.einsum("bsd,dl->bsl", mix("w"), params["decay_a"].astype(btype))
+    ww = jnp.einsum("bsl,le->bse", jnp.tanh(ww), params["decay_b"].astype(btype))
+    ww = ww.astype(jnp.float32) + params["decay_base"].astype(jnp.float32)
+    # decay in (0, 1); per-step log-decay clamped to ≥ −8 so the
+    # chunked formulation stays in f32 range (a channel decaying below
+    # e⁻⁸ per step is dead after two steps regardless)
+    w = jnp.exp(-jnp.minimum(jnp.exp(ww), 8.0)).reshape(shp)
+    return r, k, v, g, w
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 16):
+    """Chunked (GLA-style) WKV — the TPU-native formulation.
+
+    Mathematically equal to :func:`wkv_scan_ref` (property-tested), but
+    processes the sequence in chunks of ``chunk`` steps using
+    MXU-friendly matmuls, carrying the state once per chunk instead of
+    once per timestep (≈ chunk× less HBM state traffic, and a scan
+    that saves O(S/chunk) instead of O(S) residuals for backward).
+
+    Stability: within a chunk, pairwise decay factors are computed in
+    log space around the chunk *midpoint* reference, so every
+    intermediate is bounded by e^(8·chunk/2); per-step log-decays are
+    clamped to ≥ −8 (a decay below e⁻⁸ kills a channel within two
+    steps anyway).  r,k,v,w: [B, S, H, hd]; w = decay in (0, 1).
+    """
+    b, s, h, hd = r.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    lw = jnp.maximum(jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38)),
+                     -8.0)
+    if pad:
+        rf = jnp.pad(rf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    resh = lambda t: t.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, lwc = resh(rf), resh(kf), resh(vf), resh(lw)
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    mid = chunk // 2
+
+    # checkpointed: recompute per-chunk decay/pairwise tensors in the
+    # backward pass instead of stacking them across S/chunk iterations
+    @jax.checkpoint
+    def body(S, xs):
+        rb, kb, vb, lwb = xs                      # [B, C, H, hd]
+        la = jnp.cumsum(lwb, axis=1)              # la_t = Σ_{1..t} log w
+        la_prev = la - lwb                        # la_{t-1}
+        ref = la[:, mid]                          # [B, H, hd]
+        rt = rb * jnp.exp(la_prev - ref[:, None])
+        kt = kb * jnp.exp(ref[:, None] - la)
+        # pairwise coefficients A[t, τ] = Σ_i r̃_t k̃_τ, strictly causal
+        A = jnp.einsum("bthi,bzhi->bhtz", rt, kt)
+        A = jnp.tril(A, k=-1)
+        intra = jnp.einsum("bhtz,bzhj->bthj", A, vb)
+        cross = jnp.einsum("bthi,bhij->bthj", rb * jnp.exp(la_prev), S)
+        diag = jnp.einsum("bthi,hi,bthi->bth", rb, uf, kb)
+        out = cross + intra + diag[..., None] * vb
+        la_end = la[:, -1]                        # [B, H, hd]
+        S_new = (jnp.exp(la_end)[..., None] * S
+                 + jnp.einsum("bthi,bthj->bhij",
+                              kb * jnp.exp(la_end[:, None] - la), vb))
+        return S_new, out
+
+    sT, outs = jax.lax.scan(body, s0, (rc, kc, vc, lwc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, hd)
+    return out[:, :s].astype(r.dtype), sT
+
+
+def wkv_scan_ref(r, k, v, w, u, s0=None):
+    """Sequential WKV recurrence (oracle for the Pallas kernel).
+
+    r,k,v,w: [B, S, H, hd]; u: [H, hd].  Returns (out [B,S,H,hd], sT).
+    State S: [B, H, hd(key), hd(value)], f32.
+    """
+    b, s, h, hd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                       # [B, H, hd]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B, H, hd, hd]
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        state = state * wt[..., :, None] + kv
+        return state, out
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    sT, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), sT
+
+
+def rwkv_seq(params: dict, x: jax.Array, n_heads: int, head_dim: int,
+             norm_eps: float = 1e-5, chunk: int = 16) -> jax.Array:
+    """Full-sequence RWKV6 time-mix. x: [B, S, d_model]."""
+    from .layers import rms_norm
+
+    btype = x.dtype
+    b, s, d = x.shape
+    x_prev = _shift(x)
+    r, k, v, g, w = _projections(params, x, x_prev, n_heads, head_dim)
+    out, _ = wkv_chunked(r, k, v, w, params["bonus_u"], chunk=chunk)
+    out = out.reshape(b, s, n_heads * head_dim).astype(btype)
+    out = rms_norm(out, params["ln_x"], norm_eps)
+    out = out * jax.nn.silu(g)
+    return jnp.einsum("bse,ed->bsd", out, params["w_o"].astype(btype))
+
+
+def init_rwkv_cache(bsz: int, d_model: int, n_heads: int, head_dim: int,
+                    dtype=jnp.float32) -> dict:
+    return {
+        "last_x": jnp.zeros((bsz, d_model), dtype),
+        "state": jnp.zeros((bsz, n_heads, head_dim, head_dim), jnp.float32),
+    }
+
+
+def rwkv_step(params: dict, x: jax.Array, cache: dict, n_heads: int,
+              head_dim: int, norm_eps: float = 1e-5
+              ) -> tuple[jax.Array, dict]:
+    """Single decode step. x: [B, 1, d_model]."""
+    from .layers import rms_norm
+
+    btype = x.dtype
+    b, _, d = x.shape
+    x_prev = cache["last_x"][:, None].astype(btype)
+    r, k, v, g, w = _projections(params, x, x_prev, n_heads, head_dim)
+    out, s_new = wkv_scan_ref(r, k, v, w, params["bonus_u"],
+                              s0=cache["state"])
+    out = out.reshape(b, 1, n_heads * head_dim).astype(btype)
+    out = rms_norm(out, params["ln_x"], norm_eps)
+    out = out * jax.nn.silu(g)
+    y = jnp.einsum("bse,ed->bsd", out, params["w_o"].astype(btype))
+    return y, {"last_x": x[:, 0].astype(cache["last_x"].dtype),
+               "state": s_new}

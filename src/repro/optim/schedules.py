@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def constant(step, **_):
+    return jnp.ones_like(step, dtype=jnp.float32)
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000,
+                  min_frac: float = 0.1):
+    """Scale factor in [min_frac, 1]: linear warmup then cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return warm * jnp.where(step < warmup, 1.0, cos)

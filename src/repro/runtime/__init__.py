@@ -1,0 +1,17 @@
+from .elastic import RescaleReport, rescale_plan
+from .fault import (
+    FailureInjector,
+    SimulatedFault,
+    StragglerMonitor,
+    run_with_restarts,
+)
+from .pipeline import pipeline_apply, stack_stage_params
+from .train_loop import Trainer, TrainerConfig
+
+__all__ = [
+    "RescaleReport", "rescale_plan",
+    "FailureInjector", "SimulatedFault", "StragglerMonitor",
+    "run_with_restarts",
+    "pipeline_apply", "stack_stage_params",
+    "Trainer", "TrainerConfig",
+]

@@ -1,0 +1,64 @@
+"""Elastic rescale: losing nodes = a new (smaller, possibly more
+heterogeneous) platform.
+
+The framework's response has two halves:
+
+1. **State**: checkpoints are saved unsharded (gathered); restoring
+   onto the surviving mesh is just ``load_pytree`` with the new mesh's
+   shardings (``repro.checkpoint``).
+2. **Placement**: the paper's scheduler re-plans.  A node failure is
+   *exactly* the situation DagHetPart was designed for — a platform
+   whose memory/speed profile changed — so we rerun ``autoshard.plan``
+   on ``platform.without(failed)`` and compare the new stage map.
+
+``rescale_plan`` returns both the new plan and a migration summary
+(which stages moved), which a deployment would turn into data moves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.autoshard import PartitionPlan, plan
+from repro.core.platform import Platform
+
+__all__ = ["rescale_plan", "RescaleReport"]
+
+
+@dataclass
+class RescaleReport:
+    old_plan: PartitionPlan
+    new_plan: PartitionPlan | None
+    failed: set[int]
+    moved_tasks: int
+    est_step_before_s: float
+    est_step_after_s: float | None
+
+    @property
+    def feasible(self) -> bool:
+        return self.new_plan is not None
+
+
+def rescale_plan(cfg, shape, platform: Platform, failed: set[int],
+                 old_plan: PartitionPlan | None = None,
+                 **plan_kw) -> RescaleReport:
+    """Re-plan placement after losing processors ``failed``."""
+    if old_plan is None:
+        old_plan = plan(cfg, shape, platform, **plan_kw)
+        if old_plan is None:
+            raise RuntimeError("infeasible even before failure")
+    survivors = platform.without(failed)
+    new_plan = plan(cfg, shape, survivors, **plan_kw)
+    moved = 0
+    if new_plan is not None:
+        for task, st in new_plan.stage_of_task.items():
+            old_st = old_plan.stage_of_task.get(task)
+            if old_st is None or old_st != st:
+                moved += 1
+    return RescaleReport(
+        old_plan=old_plan,
+        new_plan=new_plan,
+        failed=failed,
+        moved_tasks=moved,
+        est_step_before_s=old_plan.est_step_s,
+        est_step_after_s=new_plan.est_step_s if new_plan else None,
+    )

@@ -1,0 +1,123 @@
+"""Fault-tolerance primitives.
+
+* :class:`FailureInjector` — deterministic fault injection for tests
+  (raise at a given step, or with a given probability),
+* :func:`run_with_restarts` — supervisor loop: run, catch, restore from
+  the latest checkpoint, resume; gives up after ``max_restarts``,
+* :class:`StragglerMonitor` — per-step timing stats; flags outliers and
+  exposes a *degraded fleet view* (slow hosts as slower processors) so
+  the paper's scheduler can re-plan around stragglers instead of just
+  waiting on them.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+__all__ = ["FailureInjector", "run_with_restarts", "StragglerMonitor",
+           "SimulatedFault"]
+
+
+class SimulatedFault(RuntimeError):
+    """Raised by the injector — stands in for a lost host/preemption."""
+
+
+@dataclass
+class FailureInjector:
+    fail_at_steps: tuple[int, ...] = ()
+    max_failures: int = 1
+    _count: int = 0
+
+    def check(self, step: int) -> None:
+        if self._count < self.max_failures and step in self.fail_at_steps:
+            self._count += 1
+            raise SimulatedFault(f"injected fault at step {step}")
+
+
+def run_with_restarts(make_state, run, *, max_restarts: int = 3,
+                      on_restart=None):
+    """Supervisor: ``state = make_state()`` then ``run(state)``.
+
+    ``run`` must be resumable — it reloads progress from checkpoints via
+    ``make_state``.  Returns ``(result, n_restarts)``.
+    """
+    restarts = 0
+    while True:
+        state = make_state()
+        try:
+            return run(state), restarts
+        except SimulatedFault:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(restarts)
+
+
+@dataclass
+class StragglerMonitor:
+    """Rolling per-step wall-time statistics with outlier detection.
+
+    In a multi-host deployment each host reports its step time; a host
+    whose times exceed ``threshold`` × median is flagged.  The monitor
+    then exposes a degraded :class:`~repro.core.platform.Platform` view
+    — the hook that lets DagHetPart re-plan placement around a slow
+    host (straggler mitigation by re-mapping, not just waiting).
+    """
+
+    threshold: float = 1.5
+    window: int = 32
+    times: dict[int, list[float]] = field(default_factory=dict)
+
+    def record(self, host: int, seconds: float) -> None:
+        buf = self.times.setdefault(host, [])
+        buf.append(seconds)
+        if len(buf) > self.window:
+            del buf[0]
+
+    def _medians(self) -> dict[int, float]:
+        meds = {}
+        for host, buf in self.times.items():
+            s = sorted(buf)
+            meds[host] = s[(len(s) - 1) // 2]  # lower median
+        return meds
+
+    def stragglers(self) -> list[int]:
+        meds = self._medians()
+        if len(meds) < 2:
+            return []
+        overall = sorted(meds.values())[(len(meds) - 1) // 2]
+        return [h for h, m in meds.items() if m > self.threshold * overall]
+
+    def degraded_platform(self, platform, host_of_proc):
+        """Platform with straggler processors' speeds scaled by their
+        measured slowdown — input for scheduler re-planning."""
+        from repro.core.platform import Platform, Processor
+
+        meds = self._medians()
+        if not meds:
+            return platform
+        overall = sorted(meds.values())[(len(meds) - 1) // 2]
+        procs = []
+        for j, p in enumerate(platform.procs):
+            host = host_of_proc(j)
+            m = meds.get(host)
+            if m is not None and m > self.threshold * overall:
+                procs.append(Processor(p.name + "*slow",
+                                       p.speed * overall / m, p.memory))
+            else:
+                procs.append(p)
+        return Platform(procs, platform.bandwidth,
+                        platform.name + "-degraded")
+
+
+class StepTimer:
+    def __init__(self) -> None:
+        self.t0 = time.perf_counter()
+
+    def lap(self) -> float:
+        t = time.perf_counter()
+        dt = t - self.t0
+        self.t0 = t
+        return dt

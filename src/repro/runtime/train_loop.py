@@ -1,0 +1,125 @@
+"""The training loop: data prefetch, jitted steps, periodic async
+checkpoints, fault injection hooks, straggler monitoring.
+
+Runs for real on CPU with reduced configs (examples/tests) and lowers
+unchanged for the production meshes (the dry-run lowers the same
+``build_train_step`` bundle).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data import DataConfig, Prefetcher, SyntheticTokens
+from repro.models import LM
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+from .fault import FailureInjector, StepTimer, StragglerMonitor
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    async_ckpt: bool = True
+    seed: int = 0
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    """Single-host trainer (multi-host = same loop + sharded feeding)."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 tcfg: TrainerConfig, *, mesh=None,
+                 param_dtype=None, attn_chunk: int = 64,
+                 injector: FailureInjector | None = None) -> None:
+        import jax.numpy as jnp
+        self.cfg = cfg
+        self.shape = shape
+        self.tcfg = tcfg
+        self.injector = injector
+        self.monitor = StragglerMonitor()
+        self.model = LM(
+            cfg,
+            param_dtype=param_dtype or jnp.float32,
+            attn_chunk=attn_chunk,
+            max_seq=shape.seq_len + 8,
+            remat="none",
+        )
+        self.data = SyntheticTokens(DataConfig(
+            vocab_size=cfg.vocab_size,
+            seq_len=shape.seq_len,
+            global_batch=shape.global_batch,
+            seed=tcfg.seed,
+            frontend_tokens=cfg.frontend_tokens,
+            frontend_dim=cfg.frontend_dim,
+        ))
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep,
+                                 async_save=tcfg.async_ckpt)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(self.model.loss)(params, batch)
+            lr_scale = warmup_cosine(opt_state["step"], warmup=10,
+                                     total=max(tcfg.steps, 20))
+            params, opt_state, metrics = adamw_update(
+                tcfg.opt, params, grads, opt_state, lr_scale)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        self.step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------ #
+    def init_or_restore(self):
+        params = self.model.init(self.tcfg.seed)
+        opt_state = adamw_init(params)
+        start = 0
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state, meta = self.ckpt.restore(
+                {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = int(meta["step"]) + 1
+        return params, opt_state, start
+
+    def run(self, steps: int | None = None) -> dict:
+        """Train; returns metrics history. Resumes from checkpoints."""
+        steps = steps or self.tcfg.steps
+        params, opt_state, start = self.init_or_restore()
+        it = (self.data.batch_at(s) for s in range(start, steps))
+        prefetch = Prefetcher(it)
+        history = {"loss": [], "step": [], "restarted_at": start}
+        timer = StepTimer()
+        try:
+            for step in range(start, steps):
+                if self.injector is not None:
+                    self.injector.check(step)
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in prefetch.get().items()}
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch)
+                dt = timer.lap()
+                self.monitor.record(0, dt)
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"loss diverged at {step}")
+                history["loss"].append(loss)
+                history["step"].append(step)
+                if (step + 1) % self.tcfg.ckpt_every == 0 or \
+                        step == steps - 1:
+                    self.ckpt.save(step, {"params": params,
+                                          "opt": opt_state})
+        finally:
+            prefetch.close()
+        self.ckpt.wait()
+        return history

@@ -1,0 +1,38 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py requests 512
+placeholder devices (in its own process)."""
+import numpy as np
+import pytest
+
+from repro.core import Platform, Processor, Workflow
+
+
+@pytest.fixture
+def diamond() -> Workflow:
+    """1 → {2, 3} → 4 diamond with distinct weights."""
+    wf = Workflow(4)
+    wf.work[:] = [4.0, 1.0, 3.0, 1.0]
+    wf.mem[:] = [2.0, 1.0, 1.0, 2.0]
+    wf.add_edge(0, 1, 1.0)
+    wf.add_edge(0, 2, 2.0)
+    wf.add_edge(1, 3, 1.0)
+    wf.add_edge(2, 3, 1.0)
+    return wf
+
+
+@pytest.fixture
+def unit_platform() -> Platform:
+    return Platform([Processor(f"p{i}", 1.0, 1e9) for i in range(4)], 1.0)
+
+
+def make_random_dag(n: int, seed: int, p: float = 0.3) -> Workflow:
+    rng = np.random.default_rng(seed)
+    wf = Workflow(n)
+    for u in range(n):
+        wf.work[u] = float(rng.uniform(1, 100))
+        wf.mem[u] = float(rng.uniform(1, 50))
+    for u in range(n):
+        for v in range(u + 1, n):
+            if rng.random() < p:
+                wf.add_edge(u, v, float(rng.uniform(1, 10)))
+    return wf

@@ -1,0 +1,112 @@
+"""Unit tests for the workflow DAG and quotient-graph machinery."""
+import pytest
+
+from repro.core import Workflow, build_quotient
+from repro.core.dag import QuotientGraph
+
+from conftest import make_random_dag
+
+
+class TestWorkflow:
+    def test_construction(self, diamond):
+        assert diamond.n == 4
+        assert diamond.n_edges == 4
+        assert diamond.sources() == [0]
+        assert diamond.targets() == [3]
+        assert set(diamond.children(0)) == {1, 2}
+        assert set(diamond.parents(3)) == {1, 2}
+
+    def test_task_requirement(self, diamond):
+        # r_u = in + out + m   (paper §3.1)
+        assert diamond.task_requirement(0) == pytest.approx(3.0 + 2.0)
+        assert diamond.task_requirement(3) == pytest.approx(2.0 + 2.0)
+
+    def test_topological_order(self, diamond):
+        order = diamond.topological_order()
+        pos = {u: i for i, u in enumerate(order)}
+        for u in range(diamond.n):
+            for v in diamond.succ[u]:
+                assert pos[u] < pos[v]
+
+    def test_cycle_detection(self):
+        wf = Workflow(2)
+        wf.add_edge(0, 1)
+        wf.add_edge(1, 0)
+        assert not wf.is_dag()
+
+    def test_subgraph_and_boundary(self, diamond):
+        sub, mapping = diamond.subgraph([1, 3])
+        assert sub.n == 2
+        assert sub.succ[0] == {1: 1.0}
+        ext_in, ext_out = diamond.boundary_costs([1, 3])
+        assert ext_in[0] == pytest.approx(1.0)   # edge 0->1
+        assert ext_in[1] == pytest.approx(1.0)   # edge 2->3
+        assert not ext_out
+
+    def test_self_loop_rejected(self):
+        wf = Workflow(1)
+        with pytest.raises(ValueError):
+            wf.add_edge(0, 0)
+
+
+class TestQuotient:
+    def test_build_quotient_weights(self, diamond):
+        q = build_quotient(diamond, [0, 0, 1, 1])
+        assert q.n_vertices == 2
+        vids = sorted(q.members, key=lambda v: min(q.members[v]))
+        a, b = vids
+        assert q.weight[a] == pytest.approx(5.0)
+        assert q.weight[b] == pytest.approx(4.0)
+        # edges 0->2 (2.0) and 1->3 (1.0) cross
+        assert q.succ[a][b] == pytest.approx(3.0)
+
+    def test_quotient_cycle_detected(self, diamond):
+        # {0, 3} vs {1, 2} creates a 2-cycle in the quotient
+        q = build_quotient(diamond, [0, 1, 1, 0])
+        assert not q.is_acyclic()
+        cyc = q.find_cycle()
+        assert cyc is not None and len(cyc) == 2
+
+    def test_merge_unmerge_roundtrip(self, diamond):
+        q = build_quotient(diamond, [0, 1, 2, 3])
+        before = {
+            "members": {v: set(q.members[v]) for v in q.vertices()},
+            "succ": {v: dict(q.succ[v]) for v in q.vertices()},
+            "pred": {v: dict(q.pred[v]) for v in q.vertices()},
+        }
+        verts = sorted(q.vertices())
+        vm, undo = q.merge(verts[0], verts[1])
+        assert q.n_vertices == 3
+        assert q.members[vm] == before["members"][verts[0]] | before["members"][verts[1]]
+        q.unmerge(undo)
+        assert {v: set(q.members[v]) for v in q.vertices()} == before["members"]
+        assert {v: dict(q.succ[v]) for v in q.vertices()} == before["succ"]
+        assert {v: dict(q.pred[v]) for v in q.vertices()} == before["pred"]
+
+    def test_merge_combines_parallel_edges(self, diamond):
+        q = build_quotient(diamond, [0, 1, 2, 3])
+        v = {min(q.members[x]): x for x in q.vertices()}
+        vm, _ = q.merge(v[1], v[2])          # merge the two middle blocks
+        assert q.succ[v[0]][vm] == pytest.approx(3.0)
+        assert q.succ[vm][v[3]] == pytest.approx(2.0)
+        assert q.is_acyclic()
+
+    def test_assignment_array(self, diamond):
+        q = build_quotient(diamond, [0, 0, 1, 1])
+        arr = q.assignment_array()
+        assert arr[0] == arr[1] and arr[2] == arr[3] and arr[0] != arr[2]
+
+    def test_find_cycle_on_random_partitions(self):
+        # arbitrary groupings of random DAGs: find_cycle() must
+        # terminate and, when it returns a cycle, the cycle must be real
+        for seed in range(20):
+            wf = make_random_dag(12, seed)
+            block_of = [u % 3 for u in range(wf.n)]
+            q = build_quotient(wf, block_of)
+            cyc = q.find_cycle()
+            if cyc is not None:
+                assert len(cyc) >= 2
+                for a, b in zip(cyc, cyc[1:] + cyc[:1]):
+                    # predecessor-walk produces a cycle in reverse edge
+                    # direction: b -> a must be an edge
+                    assert a in q.succ[b] or b in q.succ[a]

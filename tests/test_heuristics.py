@@ -1,0 +1,138 @@
+"""End-to-end tests of DagHetMem and DagHetPart on paper-style
+instances: validity (memory, acyclicity, injectivity) and the paper's
+qualitative claims (heuristic beats baseline; big fans gain most)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FAMILIES,
+    Platform,
+    Processor,
+    dag_het_mem,
+    dag_het_part,
+    default_cluster,
+    generate_workflow,
+    no_het_cluster,
+    random_layered_dag,
+    real_like_workflows,
+    small_cluster,
+    validate_mapping,
+)
+
+SWEEP = [1, 2, 4, 6, 9, 13, 19, 28, 36]
+
+
+class TestBaselineValidity:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_valid_mapping_per_family(self, family):
+        plat = default_cluster()
+        wf = generate_workflow(family, 200, seed=1, platform=plat)
+        res = dag_het_mem(wf, plat)
+        assert res is not None, f"baseline failed on {family}"
+        assert validate_mapping(wf, res) == []
+
+    def test_fits_single_processor_when_possible(self):
+        wf = random_layered_dag(50, seed=0)
+        huge = Platform([Processor("big", 1.0, 1e9),
+                         Processor("small", 1.0, 1.0)], 1.0)
+        res = dag_het_mem(wf, huge)
+        assert res is not None
+        assert res.k_used == 1
+
+    def test_returns_none_when_impossible(self):
+        wf = random_layered_dag(100, seed=1)
+        tiny = Platform([Processor("p", 1.0, 0.5)], 1.0)
+        assert dag_het_mem(wf, tiny) is None
+
+    def test_real_like_workflows_schedulable(self):
+        plat = default_cluster()
+        for wf in real_like_workflows():
+            res = dag_het_mem(wf, plat)
+            assert res is not None
+            assert validate_mapping(wf, res) == []
+
+
+class TestHeuristicValidity:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_valid_mapping_per_family(self, family):
+        plat = default_cluster()
+        wf = generate_workflow(family, 200, seed=1, platform=plat)
+        res = dag_het_part(wf, plat, kprime=SWEEP)
+        assert res is not None, f"heuristic failed on {family}"
+        assert validate_mapping(wf, res) == []
+
+    def test_improves_on_baseline_geomean(self):
+        """Paper headline: DagHetPart clearly beats DagHetMem on average."""
+        plat = default_cluster()
+        ratios = []
+        for family in ("blast", "bwa", "seismology", "genome"):
+            wf = generate_workflow(family, 200, seed=2, platform=plat)
+            base = dag_het_mem(wf, plat)
+            het = dag_het_part(wf, plat, kprime=SWEEP)
+            assert base is not None and het is not None
+            ratios.append(base.makespan / het.makespan)
+        geo = float(np.exp(np.mean(np.log(ratios))))
+        assert geo > 1.5, f"expected clear improvement, got {geo:.2f}x"
+
+    def test_fanned_out_families_gain_most(self):
+        """Paper §5.2.5: blast/bwa/seismology improve more than soykb."""
+        plat = default_cluster()
+
+        def ratio(family):
+            wf = generate_workflow(family, 300, seed=3, platform=plat)
+            base = dag_het_mem(wf, plat)
+            het = dag_het_part(wf, plat, kprime=SWEEP)
+            return base.makespan / het.makespan
+
+        assert ratio("blast") > ratio("soykb")
+
+    def test_homogeneous_cluster_still_improves(self):
+        """Paper §5.2.3: improvement persists even on NoHet."""
+        plat = no_het_cluster()
+        wf = generate_workflow("seismology", 200, seed=1, platform=plat)
+        base = dag_het_mem(wf, plat)
+        het = dag_het_part(wf, plat, kprime=SWEEP)
+        assert het.makespan <= base.makespan
+
+    def test_small_cluster(self):
+        plat = small_cluster()
+        wf = generate_workflow("bwa", 200, seed=1, platform=plat)
+        res = dag_het_part(wf, plat, kprime=[1, 2, 4, 8, 12, 18])
+        assert res is not None
+        assert validate_mapping(wf, res) == []
+
+    def test_distinct_processors(self):
+        plat = default_cluster()
+        wf = generate_workflow("montage", 150, seed=4, platform=plat)
+        res = dag_het_part(wf, plat, kprime=[6, 12])
+        procs = [res.quotient.proc[v] for v in res.quotient.vertices()]
+        assert len(procs) == len(set(procs))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100), n=st.integers(20, 80))
+    def test_property_valid_on_random_dags(self, seed, n):
+        plat = small_cluster()
+        wf = random_layered_dag(n, seed=seed)
+        from repro.core.workflows import scale_memory_to_platform
+        scale_memory_to_platform(wf, plat)
+        res = dag_het_part(wf, plat, kprime=[1, 3, 8, 18])
+        if res is not None:  # instances may legitimately be infeasible
+            assert validate_mapping(wf, res) == []
+
+
+class TestStepBehaviour:
+    def test_k_prime_sweep_picks_best(self):
+        plat = default_cluster()
+        wf = generate_workflow("blast", 150, seed=5, platform=plat)
+        best = dag_het_part(wf, plat, kprime=SWEEP)
+        single = dag_het_part(wf, plat, kprime=[36])
+        if single is not None:
+            assert best.makespan <= single.makespan + 1e-9
+
+    def test_bandwidth_affects_makespan(self):
+        wf = generate_workflow("blast", 200, seed=1,
+                               platform=default_cluster())
+        slow = dag_het_part(wf, default_cluster(beta=0.1), kprime=[13])
+        fast = dag_het_part(wf, default_cluster(beta=5.0), kprime=[13])
+        assert fast.makespan < slow.makespan

@@ -1,0 +1,148 @@
+"""Pallas kernel tests: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (per-kernel allclose harness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    flash_attention,
+    reference_attention,
+    reference_wkv,
+    rwkv_wkv,
+)
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _attn_ref(q, k, v, causal):
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    tr = lambda t, hh: t.transpose(0, 2, 1, 3).reshape(b * hh, s, hd)
+    o = reference_attention(tr(q, h), tr(k, hkv), tr(v, hkv), causal=causal)
+    return o.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,hkv,hd", [
+        (1, 32, 2, 2, 16),     # MHA
+        (2, 64, 4, 2, 32),     # GQA 2:1
+        (1, 128, 8, 1, 64),    # MQA
+        (2, 48, 4, 4, 128),    # uneven S vs block, MXU-width head
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_reference(self, b, s, h, hkv, hd, causal):
+        rng = np.random.default_rng(b * s + h)
+        q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+        o = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16,
+                            interpret=True)
+        np.testing.assert_allclose(o, _attn_ref(q, k, v, causal),
+                                   atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(7)
+        q = jnp.asarray(rng.normal(size=(2, 32, 4, 32)), dtype)
+        k = jnp.asarray(rng.normal(size=(2, 32, 2, 32)), dtype)
+        v = jnp.asarray(rng.normal(size=(2, 32, 2, 32)), dtype)
+        o = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+        assert o.dtype == dtype
+        np.testing.assert_allclose(
+            o.astype(jnp.float32),
+            _attn_ref(q, k, v, True).astype(jnp.float32),
+            atol=_TOL[dtype], rtol=_TOL[dtype])
+
+    def test_block_shape_independence(self):
+        """Numerics must not depend on the BlockSpec tiling."""
+        rng = np.random.default_rng(11)
+        q = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+        o1 = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+        o2 = flash_attention(q, k, v, block_q=64, block_k=32, interpret=True)
+        np.testing.assert_allclose(o1, o2, atol=1e-5, rtol=1e-5)
+
+    def test_matches_model_chunked_path(self):
+        """The model's online-softmax scan is the same math."""
+        from repro.models.attention import gqa_attention
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.normal(size=(2, 64, 4, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), jnp.float32)
+        o_kernel = flash_attention(q, k, v, block_q=16, block_k=16,
+                                   interpret=True)
+        o_model = gqa_attention(q, k, v, causal=True, chunk=16)
+        np.testing.assert_allclose(o_kernel, o_model, atol=2e-5, rtol=2e-5)
+
+
+class TestRwkvWkv:
+    def _inputs(self, b, s, h, hd, dtype=jnp.float32, seed=0):
+        rng = np.random.default_rng(seed)
+        mk = lambda: jnp.asarray(rng.normal(size=(b, s, h, hd)), dtype)
+        r, k, v = mk(), mk(), mk()
+        w = jnp.asarray(rng.uniform(0.2, 0.95, size=(b, s, h, hd)), dtype)
+        u = jnp.asarray(rng.normal(size=(h, hd)), dtype)
+        s0 = jnp.asarray(rng.normal(size=(b, h, hd, hd)), jnp.float32)
+        return r, k, v, w, u, s0
+
+    @pytest.mark.parametrize("b,s,h,hd,chunk", [
+        (1, 16, 1, 8, 4),
+        (2, 32, 2, 16, 8),
+        (1, 64, 4, 64, 16),    # rwkv6 production head size
+        (2, 24, 2, 32, 24),    # single chunk
+    ])
+    def test_matches_reference(self, b, s, h, hd, chunk):
+        r, k, v, w, u, s0 = self._inputs(b, s, h, hd, seed=s + hd)
+        o, sT = rwkv_wkv(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+        tr = lambda t: t.transpose(0, 2, 1, 3)
+        o_ref, sT_ref = reference_wkv(tr(r), tr(k), tr(v), tr(w), u, s0)
+        np.testing.assert_allclose(o, o_ref.transpose(0, 2, 1, 3),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(sT, sT_ref, atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        r, k, v, w, u, s0 = self._inputs(1, 16, 2, 16, dtype=dtype, seed=5)
+        o, sT = rwkv_wkv(r, k, v, w, u, s0, chunk=8, interpret=True)
+        assert o.dtype == dtype and sT.dtype == jnp.float32
+        tr = lambda t: t.transpose(0, 2, 1, 3)
+        o_ref, sT_ref = reference_wkv(tr(r), tr(k), tr(v), tr(w), u, s0)
+        np.testing.assert_allclose(
+            o.astype(jnp.float32),
+            o_ref.transpose(0, 2, 1, 3).astype(jnp.float32),
+            atol=_TOL[dtype], rtol=_TOL[dtype])
+
+    def test_chunk_independence(self):
+        r, k, v, w, u, s0 = self._inputs(1, 48, 2, 16, seed=9)
+        o1, s1 = rwkv_wkv(r, k, v, w, u, s0, chunk=8, interpret=True)
+        o2, s2 = rwkv_wkv(r, k, v, w, u, s0, chunk=48, interpret=True)
+        np.testing.assert_allclose(o1, o2, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(s1, s2, atol=1e-5, rtol=1e-5)
+
+    def test_state_passing_equals_two_calls(self):
+        """Running [0:S/2] then [S/2:S] with the carried state must equal
+        one full call — the invariant behind chunked serving."""
+        r, k, v, w, u, s0 = self._inputs(2, 32, 2, 16, seed=13)
+        o_full, s_full = rwkv_wkv(r, k, v, w, u, s0, chunk=8, interpret=True)
+        half = 16
+        sl = lambda t, a, b: t[:, a:b]
+        o1, s_mid = rwkv_wkv(sl(r, 0, half), sl(k, 0, half), sl(v, 0, half),
+                             sl(w, 0, half), u, s0, chunk=8, interpret=True)
+        o2, s_end = rwkv_wkv(sl(r, half, 32), sl(k, half, 32),
+                             sl(v, half, 32), sl(w, half, 32), u, s_mid,
+                             chunk=8, interpret=True)
+        np.testing.assert_allclose(
+            jnp.concatenate([o1, o2], axis=1), o_full, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(s_end, s_full, atol=1e-5, rtol=1e-5)
+
+    def test_matches_model_rwkv_path(self):
+        """kernels.ref and the model's wkv_scan_ref agree."""
+        from repro.models.rwkv import wkv_scan_ref
+        r, k, v, w, u, s0 = self._inputs(2, 16, 2, 16, seed=21)
+        o_kernel, sT_kernel = rwkv_wkv(r, k, v, w, u, s0, chunk=8,
+                                       interpret=True)
+        o_model, sT_model = wkv_scan_ref(r, k, v, w, u, s0=s0)
+        np.testing.assert_allclose(o_kernel, o_model, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(sT_kernel, sT_model, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,98 @@
+"""Makespan / bottom-weight tests, incl. the paper's Fig. 1 example."""
+import pytest
+
+from repro.core import (
+    Platform,
+    Processor,
+    Workflow,
+    bottom_weights,
+    critical_path,
+    makespan,
+)
+from repro.core.dag import QuotientGraph
+
+
+def fig1_quotient():
+    """The quotient graph of the paper's Fig. 1 (right), unitary tasks."""
+    wf = Workflow(9)
+    for u in range(9):
+        wf.work[u] = 1.0
+    q = QuotientGraph(wf)
+    v1 = q.new_vertex({0, 1, 2, 3})
+    v2 = q.new_vertex({4})
+    v3 = q.new_vertex({5, 6, 7})
+    v4 = q.new_vertex({8})
+    q.add_edge(v1, v2, 1.0)
+    q.add_edge(v1, v3, 2.0)   # c_{v1,v3} = 2 (two unit edges)
+    q.add_edge(v2, v3, 1.0)
+    q.add_edge(v2, v4, 1.0)
+    q.add_edge(v3, v4, 1.0)
+    return q, (v1, v2, v3, v4)
+
+
+def test_fig1_bottom_weights():
+    """Paper §3.3: l_v4 = 1, l_v3 = 5, l_v2 = 7, l_v1 = 12."""
+    q, (v1, v2, v3, v4) = fig1_quotient()
+    plat = Platform([Processor(f"p{i}", 1.0, 100.0) for i in range(4)], 1.0)
+    l = bottom_weights(q, plat)
+    assert l[v4] == pytest.approx(1.0)
+    assert l[v3] == pytest.approx(5.0)
+    assert l[v2] == pytest.approx(7.0)
+    assert l[v1] == pytest.approx(12.0)
+    assert makespan(q, plat) == pytest.approx(12.0)
+
+
+def test_fig1_critical_path():
+    q, (v1, v2, v3, v4) = fig1_quotient()
+    plat = Platform([Processor(f"p{i}", 1.0, 100.0) for i in range(4)], 1.0)
+    # l_v1 = 4 + max(1 + 7, 2 + 5) = 12 via v2; then v2 -> v3 (1+5 > 1+1)
+    assert critical_path(q, plat) == [v1, v2, v3, v4]
+
+
+def test_unassigned_speed_is_one():
+    """Estimated makespan: unassigned vertices compute at speed 1."""
+    q, (v1, v2, v3, v4) = fig1_quotient()
+    fast = Platform([Processor(f"p{i}", 10.0, 100.0) for i in range(4)], 1.0)
+    # nothing assigned -> speeds are 1 regardless of the platform
+    assert makespan(q, fast) == pytest.approx(12.0)
+    # assigning v1 to a 10x processor shaves 90% off its compute part
+    q.proc[v1] = 0
+    l = bottom_weights(q, fast)
+    assert l[v1] == pytest.approx(0.4 + 8.0)
+
+
+def test_speed_and_bandwidth_scaling():
+    q, (v1, v2, v3, v4) = fig1_quotient()
+    plat = Platform([Processor(f"p{i}", 2.0, 100.0) for i in range(4)], 0.5)
+    for i, v in enumerate((v1, v2, v3, v4)):
+        q.proc[v] = i
+    # compute halves, communication doubles:
+    # l_v4 = .5, l_v3 = 1.5 + 2 + .5 = 4, l_v2 = .5 + max(2+4, 2+.5) = 6.5,
+    # l_v1 = 2 + max(2+6.5, 4+4) = 10.5
+    assert makespan(q, plat) == pytest.approx(10.5)
+
+
+def test_single_block_no_communication():
+    """An unpartitioned DAG executes at w_total / s with no comms."""
+    wf = Workflow(3)
+    wf.work[:] = [1.0, 2.0, 3.0]
+    wf.add_edge(0, 1, 100.0)
+    wf.add_edge(1, 2, 100.0)
+    q = QuotientGraph(wf)
+    v = q.new_vertex({0, 1, 2})
+    plat = Platform([Processor("p", 4.0, 1e9)], 0.001)
+    q.proc[v] = 0
+    assert makespan(q, plat) == pytest.approx(6.0 / 4.0)
+
+
+def test_cyclic_quotient_has_no_makespan():
+    wf = Workflow(2)
+    wf.add_edge(0, 1)
+    q = QuotientGraph(wf)
+    a = q.new_vertex({0})
+    b = q.new_vertex({1})
+    q.add_edge(a, b, 1.0)
+    q.add_edge(b, a, 1.0)
+    plat = Platform([Processor("p", 1.0, 1.0)], 1.0)
+    with pytest.raises(ValueError):
+        makespan(q, plat)

@@ -1,0 +1,138 @@
+"""Peak-memory traversal tests (MemDag role) — incl. hypothesis oracle
+checks of the greedy heuristic against the exact subset DP."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Workflow,
+    block_requirement,
+    exact_min_peak,
+    greedy_min_peak,
+    simulate_peak,
+)
+
+from conftest import make_random_dag
+
+
+def brute_force_min_peak(wf, ext_in=None, ext_out=None):
+    """Min peak over *all* topological orders (n ≤ 8)."""
+    best = float("inf")
+    nodes = list(range(wf.n))
+    for perm in itertools.permutations(nodes):
+        pos = {u: i for i, u in enumerate(perm)}
+        if any(pos[u] > pos[v] for u in nodes for v in wf.succ[u]):
+            continue
+        best = min(best, simulate_peak(wf, perm, ext_in, ext_out))
+    return best
+
+
+class TestSimulate:
+    def test_chain_peak(self):
+        # chain a->b->c, unit files; peak at any step: live + m + out
+        wf = Workflow(3)
+        wf.mem[:] = [5.0, 1.0, 2.0]
+        wf.add_edge(0, 1, 3.0)
+        wf.add_edge(1, 2, 4.0)
+        # step a: 0 + 5 + 3 = 8; step b: 3 (in live) + 1 + 4 = 8;
+        # step c: 4 + 2 = 6
+        assert simulate_peak(wf, [0, 1, 2]) == pytest.approx(8.0)
+
+    def test_order_matters(self):
+        # fork a -> {b, c}: running the fat-memory child while the fat
+        # file is still live is worse than consuming the fat file first
+        wf = Workflow(3)
+        wf.mem[:] = [1.0, 5.0, 1.0]
+        wf.add_edge(0, 1, 10.0)
+        wf.add_edge(0, 2, 1.0)
+        p_bc = simulate_peak(wf, [0, 1, 2])   # b first: 11 live + 5 = 16
+        p_cb = simulate_peak(wf, [0, 2, 1])   # c first: 10 live + 5 = 15
+        assert p_bc == pytest.approx(16.0)
+        assert p_cb == pytest.approx(15.0)
+
+    def test_invalid_order_rejected(self):
+        wf = Workflow(2)
+        wf.add_edge(0, 1)
+        with pytest.raises(ValueError):
+            simulate_peak(wf, [1, 0])
+
+    def test_external_files(self):
+        wf = Workflow(1)
+        wf.mem[0] = 2.0
+        assert simulate_peak(wf, [0], {0: 3.0}, {0: 5.0}) == pytest.approx(10.0)
+
+
+class TestExact:
+    def test_exact_equals_bruteforce_small(self):
+        for seed in range(15):
+            wf = make_random_dag(6, seed, p=0.4)
+            assert exact_min_peak(wf) == pytest.approx(
+                brute_force_min_peak(wf))
+
+    def test_exact_with_boundary(self):
+        for seed in range(5):
+            wf = make_random_dag(5, seed, p=0.5)
+            ext_in = {0: 7.0}
+            ext_out = {wf.n - 1: 3.0}
+            assert exact_min_peak(wf, ext_in, ext_out) == pytest.approx(
+                brute_force_min_peak(wf, ext_in, ext_out))
+
+
+@st.composite
+def small_dags(draw):
+    n = draw(st.integers(2, 8))
+    wf = Workflow(n)
+    for u in range(n):
+        wf.mem[u] = draw(st.floats(0.0, 50.0, allow_nan=False))
+    for u in range(n):
+        for v in range(u + 1, n):
+            if draw(st.booleans()):
+                wf.add_edge(u, v, draw(st.floats(0.1, 10.0)))
+    return wf
+
+
+class TestGreedyVsExact:
+    @settings(max_examples=60, deadline=None)
+    @given(small_dags())
+    def test_greedy_upper_bounds_exact(self, wf):
+        exact = exact_min_peak(wf)
+        greedy = greedy_min_peak(wf)
+        assert greedy >= exact - 1e-9
+
+    @settings(max_examples=60, deadline=None)
+    @given(small_dags())
+    def test_greedy_is_feasible_simulation(self, wf):
+        peak, order = greedy_min_peak(wf, return_order=True)
+        assert simulate_peak(wf, order) == pytest.approx(peak)
+
+    @settings(max_examples=40, deadline=None)
+    @given(small_dags())
+    def test_exact_never_above_any_topological_order(self, wf):
+        exact = exact_min_peak(wf)
+        order = wf.topological_order()
+        assert exact <= simulate_peak(wf, order) + 1e-9
+
+
+class TestBlockRequirement:
+    def test_exact_path_taken_for_small_blocks(self):
+        wf = make_random_dag(6, 3, p=0.4)
+        r_exact = block_requirement(wf, range(6), exact_limit=10)
+        r_greedy = block_requirement(wf, range(6), exact_limit=0)
+        assert r_exact <= r_greedy + 1e-9
+
+    def test_subset_block_with_boundary(self):
+        wf = Workflow(3)
+        wf.mem[:] = [1.0, 2.0, 3.0]
+        wf.add_edge(0, 1, 5.0)
+        wf.add_edge(1, 2, 7.0)
+        # block {1}: ext_in 5 + m 2 + ext_out 7
+        assert block_requirement(wf, [1]) == pytest.approx(14.0)
+
+    def test_greedy_quality_on_larger_graphs(self):
+        # greedy should stay within 2x of exact for moderate DAGs
+        for seed in range(5):
+            wf = make_random_dag(12, seed, p=0.25)
+            exact = exact_min_peak(wf)
+            greedy = greedy_min_peak(wf)
+            assert greedy <= 2.0 * exact + 1e-9

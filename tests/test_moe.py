@@ -1,0 +1,88 @@
+"""MoE layer property tests: capacity routing semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import Initializer, swiglu
+from repro.models.moe import init_moe, moe_capacity, moe_ffn
+
+
+def make_params(d=16, f=32, e=4, seed=0):
+    init = Initializer(seed, jnp.float32)
+    return init_moe(init, d, f, e)
+
+
+class TestCapacity:
+    def test_formula(self):
+        assert moe_capacity(128, 8, 2, 1.25) == 40
+        assert moe_capacity(4, 64, 8, 1.0) == 1     # floor at 1
+        assert moe_capacity(16, 2, 2, 100.0) == 16  # cap at tokens
+
+
+class TestRouting:
+    def test_no_drop_regime_matches_manual_mixture(self):
+        """With capacity >= tokens, expert-choice == token-choice: the
+        output equals the gate-weighted mixture of expert FFNs."""
+        rng = np.random.default_rng(0)
+        p = make_params()
+        x = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+        y, _ = moe_ffn(p, x, top_k=2, capacity_factor=100.0)
+
+        logits = jnp.einsum("gtd,de->gte", x, p["router"])
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_vals, top_idx = jax.lax.top_k(probs, 2)
+        top_vals = top_vals / top_vals.sum(-1, keepdims=True)
+        expert_out = jnp.stack([
+            swiglu(x, p["w_gate"][e], p["w_up"][e], p["w_down"][e])
+            for e in range(4)
+        ], axis=2)                                    # [G, T, E, d]
+        manual = jnp.zeros_like(x)
+        for k in range(2):
+            sel = jnp.take_along_axis(
+                expert_out, top_idx[..., k][..., None, None], axis=2
+            )[..., 0, :]
+            manual = manual + top_vals[..., k][..., None] * sel
+        np.testing.assert_allclose(y, manual, atol=1e-5, rtol=1e-5)
+
+    def test_tight_capacity_drops_tokens(self):
+        rng = np.random.default_rng(1)
+        p = make_params()
+        x = jnp.asarray(rng.normal(size=(1, 32, 16)), jnp.float32)
+        y_tight, _ = moe_ffn(p, x, top_k=2, capacity_factor=0.25)
+        y_loose, _ = moe_ffn(p, x, top_k=2, capacity_factor=100.0)
+        # tight capacity zeroes some tokens' updates
+        tight_norms = jnp.linalg.norm(y_tight[0], axis=-1)
+        assert float((tight_norms == 0.0).sum()) > 0
+        assert float(jnp.linalg.norm(y_tight - y_loose)) > 0
+
+    def test_aux_loss_equals_topk_when_balanced(self):
+        """Switch-style aux: E·Σ f_e·P_e = k at perfect balance (each
+        expert dispatched a k/E fraction at probability 1/E)."""
+        p = make_params(seed=2)
+        # zero router -> uniform probabilities
+        p = dict(p, router=jnp.zeros_like(p["router"]))
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(2, 64, 16)), jnp.float32)
+        _, aux = moe_ffn(p, x, top_k=2)
+        assert float(aux) == pytest.approx(2.0, abs=0.05)
+
+    def test_gradients_reach_all_used_experts(self):
+        rng = np.random.default_rng(3)
+        p = make_params(seed=3)
+        x = jnp.asarray(rng.normal(size=(1, 16, 16)), jnp.float32)
+
+        def loss(p):
+            y, aux = moe_ffn(p, x, top_k=2, capacity_factor=2.0)
+            return (y ** 2).mean() + 0.01 * aux
+
+        g = jax.grad(loss)(p)
+        assert bool(jnp.all(jnp.isfinite(g["w_gate"])))
+        assert float(jnp.abs(g["router"]).max()) > 0
+
+    def test_shard_hook_is_called(self):
+        calls = []
+        p = make_params()
+        x = jnp.zeros((1, 8, 16), jnp.float32)
+        moe_ffn(p, x, top_k=2, shard=lambda v, kind: calls.append(kind) or v)
+        assert "moe_tokens" in calls and "moe_hidden" in calls

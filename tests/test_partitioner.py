@@ -1,0 +1,109 @@
+"""Acyclic-partitioner tests: the acyclicity invariant is the paper's
+hard requirement (quotient must be a DAG for the makespan to exist)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Workflow,
+    acyclic_partition,
+    build_quotient,
+    edge_cut,
+    partition_block,
+    random_layered_dag,
+)
+
+from conftest import make_random_dag
+
+
+def assert_valid_partition(wf, block_of, k):
+    assert len(block_of) == wf.n
+    ids = set(block_of)
+    assert len(ids) <= k
+    assert ids == set(range(len(ids))), "block ids must be compact"
+    # topological-id invariant => acyclic quotient
+    for u in range(wf.n):
+        for v in wf.succ[u]:
+            assert block_of[u] <= block_of[v]
+    q = build_quotient(wf, block_of)
+    assert q.is_acyclic()
+
+
+class TestAcyclicPartition:
+    @pytest.mark.parametrize("k", [1, 2, 3, 7])
+    def test_valid_on_random_dags(self, k):
+        for seed in range(10):
+            wf = make_random_dag(30, seed)
+            assert_valid_partition(wf, acyclic_partition(wf, k), k)
+
+    def test_requests_more_blocks_than_tasks(self):
+        wf = make_random_dag(3, 0)
+        block_of = acyclic_partition(wf, 10)
+        assert_valid_partition(wf, block_of, 10)
+
+    def test_k1_single_block(self):
+        wf = make_random_dag(20, 1)
+        assert set(acyclic_partition(wf, 1)) == {0}
+
+    def test_balance(self):
+        wf = random_layered_dag(400, seed=2)
+        block_of = acyclic_partition(wf, 8, eps=0.2)
+        k_eff = len(set(block_of))
+        weights = [0.0] * k_eff
+        for u in range(wf.n):
+            weights[block_of[u]] += wf.work[u]
+        target = sum(wf.work) / k_eff
+        assert max(weights) <= 1.5 * target  # loose: refinement may shift
+
+    def test_refinement_does_not_worsen_cut(self):
+        for seed in range(5):
+            wf = random_layered_dag(300, seed=seed)
+            cut_refined = edge_cut(wf, acyclic_partition(wf, 6, passes=4))
+            cut_raw = edge_cut(wf, acyclic_partition(wf, 6, passes=0))
+            assert cut_refined <= cut_raw + 1e-9
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n=st.integers(2, 40),
+        k=st.integers(1, 8),
+        seed=st.integers(0, 1000),
+    )
+    def test_property_always_acyclic_and_complete(self, n, k, seed):
+        wf = make_random_dag(n, seed, p=0.25)
+        assert_valid_partition(wf, acyclic_partition(wf, k), k)
+
+
+class TestPartitionBlock:
+    def test_strict_progress_for_fitblock(self):
+        """FitBlock relies on a >1-task block always splitting."""
+        for seed in range(10):
+            wf = make_random_dag(15, seed, p=0.5)
+            parts = partition_block(wf, list(range(wf.n)), 2)
+            assert len(parts) >= 2
+            assert sum(len(p) for p in parts) == wf.n
+
+    def test_skewed_weights_still_split(self):
+        # one task dominating the weight must not prevent a 2-way split
+        wf = Workflow(2)
+        wf.work[:] = [1000.0, 0.001]
+        wf.add_edge(0, 1, 1.0)
+        parts = partition_block(wf, [0, 1], 2)
+        assert len(parts) == 2
+
+    def test_subset_partition_acyclic_in_parent(self):
+        wf = random_layered_dag(100, seed=5)
+        nodes = list(range(40, 90))
+        parts = partition_block(wf, nodes, 3)
+        # contiguity within the parent graph: no edge from a later part
+        # back into an earlier one
+        part_of = {}
+        for i, p in enumerate(parts):
+            for u in p:
+                part_of[u] = i
+        for u in nodes:
+            for v in wf.succ[u]:
+                if v in part_of:
+                    assert part_of[u] <= part_of[v]
+
+    def test_singleton_passthrough(self):
+        wf = make_random_dag(5, 0)
+        assert partition_block(wf, [2], 2) == [[2]]

@@ -1,0 +1,55 @@
+"""End-to-end system behaviour tests."""
+import numpy as np
+
+from repro.core import (
+    dag_het_mem,
+    dag_het_part,
+    default_cluster,
+    generate_workflow,
+    validate_mapping,
+)
+
+
+def test_end_to_end_schedule_and_validate():
+    """Full pipeline: generate -> schedule (both algorithms) ->
+    validate every DAGP-PM constraint -> heuristic beats baseline."""
+    plat = default_cluster()
+    wf = generate_workflow("seismology", 300, seed=7, platform=plat)
+    base = dag_het_mem(wf, plat)
+    het = dag_het_part(wf, plat, kprime=[1, 4, 9, 19, 36])
+    assert base is not None and het is not None
+    assert validate_mapping(wf, base) == []
+    assert validate_mapping(wf, het) == []
+    assert het.makespan <= base.makespan
+
+
+def test_estimated_makespan_is_deterministic():
+    plat = default_cluster()
+    wf = generate_workflow("bwa", 250, seed=3, platform=plat)
+    r1 = dag_het_part(wf, plat, kprime=[9, 19])
+    r2 = dag_het_part(wf, plat, kprime=[9, 19])
+    assert r1.makespan == r2.makespan
+
+
+def test_model_to_scheduler_to_runtime_roundtrip(tmp_path):
+    """The three layers compose: arch config -> workflow DAG ->
+    placement plan; same arch config -> reduced model -> train step."""
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.core.autoshard import plan
+    from repro.core.platform import tpu_fleet_si
+    from repro.runtime import Trainer, TrainerConfig
+
+    arch = "llama3_8b"
+    p = plan(get_config(arch), ShapeConfig("d", 32768, 128, "decode"),
+             tpu_fleet_si({"v5e": 48, "v4": 16}), kprime=[16, 32, 64])
+    assert p is not None and p.valid
+
+    shape = ShapeConfig("t", 16, 4, "train")
+    trainer = Trainer(get_smoke_config(arch), shape,
+                      TrainerConfig(steps=3, ckpt_every=2,
+                                    ckpt_dir=str(tmp_path)),
+                      attn_chunk=8)
+    hist = trainer.run()
+    assert len(hist["loss"]) == 3
+    assert all(np.isfinite(x) for x in hist["loss"])

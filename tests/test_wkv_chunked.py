@@ -1,0 +1,74 @@
+"""Property tests: the chunked (GLA-style) WKV formulation is
+equivalent to the sequential recurrence — the invariant behind the
+rwkv hillclimb in EXPERIMENTS.md §Perf."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rwkv import wkv_chunked, wkv_scan_ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    s=st.integers(1, 40),
+    h=st.integers(1, 3),
+    hd=st.sampled_from([8, 16]),
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 10_000),
+    strong_decay=st.booleans(),
+)
+def test_chunked_equals_sequential(b, s, h, hd, chunk, seed, strong_decay):
+    rng = np.random.default_rng(seed)
+    r, k, v = (_rand(rng, b, s, h, hd) for _ in range(3))
+    hi = 8.0 if strong_decay else 1.0
+    w = jnp.exp(-jnp.asarray(rng.uniform(1e-3, hi, size=(b, s, h, hd)),
+                             jnp.float32))
+    u = _rand(rng, h, hd)
+    s0 = _rand(rng, b, h, hd, hd)
+    o1, st1 = wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+    o2, st2 = wkv_scan_ref(r, k, v, w, u, s0)
+    scale = max(1.0, float(jnp.max(jnp.abs(o2))))
+    np.testing.assert_allclose(o1, o2, atol=5e-4 * scale, rtol=5e-4)
+    np.testing.assert_allclose(st1, st2, atol=5e-4, rtol=5e-4)
+
+
+def test_state_passing_across_calls():
+    rng = np.random.default_rng(3)
+    b, s, h, hd = 2, 32, 2, 16
+    r, k, v = (_rand(rng, b, s, h, hd) for _ in range(3))
+    w = jnp.exp(-jnp.asarray(rng.uniform(0.01, 3.0, size=(b, s, h, hd)),
+                             jnp.float32))
+    u = _rand(rng, h, hd)
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    o_full, st_full = wkv_chunked(r, k, v, w, u, s0, chunk=8)
+    o1, st_mid = wkv_chunked(r[:, :16], k[:, :16], v[:, :16], w[:, :16],
+                             u, s0, chunk=8)
+    o2, st_end = wkv_chunked(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:],
+                             u, st_mid, chunk=8)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), o_full,
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(st_end, st_full, atol=1e-4, rtol=1e-4)
+
+
+def test_gradients_flow():
+    import jax
+    rng = np.random.default_rng(5)
+    b, s, h, hd = 1, 16, 1, 8
+    r, k, v = (_rand(rng, b, s, h, hd) for _ in range(3))
+    w = jnp.exp(-jnp.asarray(rng.uniform(0.01, 2.0, size=(b, s, h, hd)),
+                             jnp.float32))
+    u = _rand(rng, h, hd)
+
+    def loss(r):
+        o, _ = wkv_chunked(r, k, v, w, u, chunk=8)
+        return (o ** 2).mean()
+
+    g = jax.grad(loss)(r)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.max(jnp.abs(g))) > 0
