@@ -1,0 +1,26 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+export PYTHONPATH
+
+.PHONY: verify test fast bench bench-large
+
+# tier-1 verification (ROADMAP.md)
+verify:
+	python -m pytest -x -q
+
+# full test suite without -x (see every failure)
+test:
+	python -m pytest -q
+
+# core scheduling tests only (seconds, not minutes)
+fast:
+	python -m pytest -q -m "not slow" \
+		tests/test_dag.py tests/test_makespan.py tests/test_memdag.py \
+		tests/test_partitioner.py tests/test_heuristics.py \
+		tests/test_incremental.py tests/test_system.py
+
+bench:
+	python -m benchmarks.bench_runtime
+
+# paper-scale runtime tier (n = 10000 / 30000) -> BENCH_runtime.json
+bench-large:
+	python -m benchmarks.bench_runtime --large

@@ -3,20 +3,75 @@
 Paper (C++): real <1 s; small ≈ seconds (DagHetPart 1.63× slower);
 middle ≈ minutes (parity); big: DagHetPart 0.85× (faster).  The
 Python-vs-C++ constant differs; the *shape* (relative trend with size)
-is the claim under test."""
+is the claim under test.
+
+``python -m benchmarks.bench_runtime`` runs the quick tier (200/1000
+tasks).  ``--large`` runs the paper-scale tier (10000/30000 tasks).
+Both tiers append their results to ``BENCH_runtime.json`` so the perf
+trajectory is tracked across PRs (the file maps tier -> per-size
+aggregate plus per-family rows; it is rewritten after every size group
+so a partial run still leaves usable data on disk).
+"""
 from __future__ import annotations
+
+import json
+import platform as _platform
+import sys
+import time
+from pathlib import Path
 
 from repro.core import default_cluster, real_like_workflows
 
 from .common import emit, geomean, run_pair, workflow_suite
 
+RESULT_FILE = Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
 
-def run(sizes=(200, 1000), seeds=(1,)) -> dict:
+
+def _load_results() -> dict:
+    if RESULT_FILE.exists():
+        try:
+            return json.loads(RESULT_FILE.read_text())
+        except (ValueError, OSError):
+            return {}
+    return {}
+
+
+def _write_results(results: dict) -> None:
+    results["meta"] = {
+        "python": _platform.python_version(),
+        "updated_unix": time.time(),
+    }
+    RESULT_FILE.write_text(json.dumps(results, indent=2, sort_keys=True))
+
+
+def run(sizes=(200, 1000), seeds=(1,), tier: str = "quick",
+        write_json: bool = True) -> dict:
     plat = default_cluster()
     out: dict[str, dict] = {}
+    results = _load_results()
+    tier_out = results.setdefault(tier, {})
     groups: dict[int, list] = {}
+    rows: dict[int, list[dict]] = {}
     for family, n, seed, wf in workflow_suite(plat, sizes, seeds):
-        groups.setdefault(n, []).append(run_pair(wf, plat))
+        r = run_pair(wf, plat)
+        groups.setdefault(n, []).append(r)
+        rows.setdefault(n, []).append({
+            "family": family, "seed": seed,
+            "base_ms": r.base_ms, "het_ms": r.het_ms,
+            "base_s": r.base_time_s, "het_s": r.het_time_s,
+        })
+        emit(f"runtime/n={n}/{family}/dag_het_part_s", r.het_time_s, "")
+        # keep partial results on disk: large instances take minutes
+        done = sorted(groups)
+        for m in done:
+            rs = groups[m]
+            tier_out[f"n={m}"] = {
+                "base_s": geomean([x.base_time_s for x in rs]),
+                "het_s": geomean([x.het_time_s for x in rs]),
+                "families": rows[m],
+            }
+        if write_json:
+            _write_results(results)
     for n, rs in sorted(groups.items()):
         base_t = geomean([r.base_time_s for r in rs])
         het_t = geomean([r.het_time_s for r in rs])
@@ -25,11 +80,17 @@ def run(sizes=(200, 1000), seeds=(1,)) -> dict:
         emit(f"runtime/n={n}/dag_het_part_s", het_t, "paper_table4")
         emit(f"runtime/n={n}/relative", het_t / base_t,
              "x;paper:shrinks_with_size")
-    real = [run_pair(wf, plat) for wf in real_like_workflows()]
-    emit("runtime/real/dag_het_part_s",
-         geomean([r.het_time_s for r in real]), "paper:<1s")
+    if tier == "quick":
+        real = [run_pair(wf, plat) for wf in real_like_workflows()]
+        emit("runtime/real/dag_het_part_s",
+             geomean([r.het_time_s for r in real]), "paper:<1s")
+    if write_json:
+        _write_results(results)
     return out
 
 
 if __name__ == "__main__":
-    run()
+    if "--large" in sys.argv:
+        run(sizes=(10000, 30000), seeds=(1,), tier="large")
+    else:
+        run()

@@ -9,6 +9,8 @@ heterogeneous platforms (Kulagina, Meyerhenke, Benoit — ICPP'24):
 * :mod:`repro.core.memdag` — min-peak-memory traversals (MemDag role),
 * :mod:`repro.core.partitioner` — acyclic DAG partitioning (dagP role),
 * :mod:`repro.core.makespan` — bottom weights / makespan / critical path,
+* :mod:`repro.core.incremental` — delta-evaluated makespan engine
+  (bounded probes + transactional merges for the heuristic hot paths),
 * :mod:`repro.core.baseline` — DagHetMem,
 * :mod:`repro.core.heuristic` — DagHetPart (the four-step heuristic),
 * :mod:`repro.core.workflows` — workflow-instance generators,
@@ -27,8 +29,16 @@ from .platform import (
     small_cluster,
     tpu_fleet,
 )
-from .makespan import bottom_weights, critical_path, makespan
-from .memdag import block_requirement, exact_min_peak, greedy_min_peak, simulate_peak
+from .incremental import IncrementalEvaluator
+from .makespan import bottom_weights, bottom_weights_flat, critical_path, makespan
+from .memdag import (
+    block_requirement,
+    block_requirement_witness,
+    exact_min_peak,
+    greedy_min_peak,
+    simulate_peak,
+    simulate_peak_members,
+)
 from .partitioner import acyclic_partition, edge_cut, partition_block
 from .baseline import MappingResult, dag_het_mem, validate_mapping
 from .heuristic import dag_het_part
@@ -44,8 +54,11 @@ __all__ = [
     "Platform", "Processor",
     "default_cluster", "small_cluster", "large_cluster",
     "more_het_cluster", "less_het_cluster", "no_het_cluster", "tpu_fleet",
-    "bottom_weights", "critical_path", "makespan",
-    "block_requirement", "exact_min_peak", "greedy_min_peak", "simulate_peak",
+    "bottom_weights", "bottom_weights_flat", "critical_path", "makespan",
+    "IncrementalEvaluator",
+    "block_requirement", "block_requirement_witness",
+    "exact_min_peak", "greedy_min_peak",
+    "simulate_peak", "simulate_peak_members",
     "acyclic_partition", "edge_cut", "partition_block",
     "MappingResult", "dag_het_mem", "dag_het_part", "validate_mapping",
     "FAMILIES", "generate_workflow", "real_like_workflows",

@@ -156,11 +156,13 @@ def validate_mapping(
     * every block's memory requirement within its processor's memory.
 
     ``r_{V_i}`` is the *minimum* peak over traversals; any witness order
-    (e.g. the baseline's packing traversal, stored in
-    ``result.extras["orders"]``) upper-bounds it, so we take the best
-    over the greedy re-derivation and the witness.
+    (e.g. the baseline's packing traversal or the heuristic's composed
+    merge witnesses, stored in ``result.extras["orders"]``) upper-bounds
+    it.  The witness is simulated *first* — when it already proves the
+    fit, the much costlier greedy re-derivation is skipped entirely,
+    which keeps validation affordable at 30k tasks.
     """
-    from .memdag import block_requirement, simulate_peak
+    from .memdag import block_requirement, simulate_peak_members
 
     errors: list[str] = []
     q = result.quotient
@@ -185,17 +187,26 @@ def validate_mapping(
         if pj in used:
             errors.append(f"processor {pj} used by blocks {used[pj]} and {vid}")
         used[pj] = vid
-        members = sorted(q.members[vid])
-        r = block_requirement(wf, members, exact_limit=exact_limit)
-        witness = result.extras.get("orders", {}).get(vid)
-        if witness is not None:
-            sub, mapping = wf.subgraph(members)
-            local = {u: i for i, u in enumerate(mapping)}
-            ext_in, ext_out = wf.boundary_costs(members)
-            base = sum(wf.persistent[u] for u in members)
-            r = min(r, base + simulate_peak(
-                sub, [local[u] for u in witness], ext_in, ext_out))
+        members = q.members[vid]
         cap = result.platform.memory(pj)
+        witness = result.extras.get("orders", {}).get(vid)
+        r = None
+        if witness is not None and set(witness) == members:
+            done: set[int] = set()
+            valid = True
+            for u in witness:
+                if any(p in members and p not in done
+                       for p in wf.pred[u]):
+                    valid = False
+                    break
+                done.add(u)
+            if valid:
+                base = sum(wf.persistent[u] for u in members)
+                r = base + simulate_peak_members(wf, members, witness)
+        if r is None or r > cap:
+            r_greedy = block_requirement(wf, sorted(members),
+                                         exact_limit=exact_limit)
+            r = r_greedy if r is None else min(r, r_greedy)
         if r > cap * (1 + 1e-9):
             errors.append(
                 f"block {vid}: requirement {r:.3f} exceeds memory "

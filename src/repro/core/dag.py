@@ -27,6 +27,7 @@ import numpy as np
 __all__ = [
     "Workflow",
     "QuotientGraph",
+    "FlatQuotient",
     "build_quotient",
 ]
 
@@ -199,6 +200,29 @@ class Workflow:
 # ---------------------------------------------------------------------- #
 # quotient graph (paper §3.3)
 # ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class FlatQuotient:
+    """Flat CSR snapshot of a :class:`QuotientGraph`'s adjacency.
+
+    Vertices appear in topological order; ``vids[i]`` is the quotient
+    vertex id at position ``i`` and ``pos`` maps back.  ``indptr`` /
+    ``indices`` / ``costs`` describe successor adjacency in CSR form
+    (``indices`` holds *positions*, not vids), so bottom-weight sweeps
+    can run array-driven instead of dict-driven.
+    """
+
+    vids: np.ndarray      # int64 [n]   vertex ids in topological order
+    pos: dict             # vid -> position
+    indptr: np.ndarray    # int64 [n+1] successor row pointers
+    indices: np.ndarray   # int64 [nnz] successor positions
+    costs: np.ndarray     # float64 [nnz] edge costs
+    weight: np.ndarray    # float64 [n]  block work
+
+    @property
+    def n(self) -> int:
+        return len(self.vids)
+
+
 @dataclass
 class QuotientGraph:
     """Mutable quotient DAG ``Γ`` induced by a partition of a workflow.
@@ -293,6 +317,28 @@ class QuotientGraph:
             raise ValueError("quotient graph is cyclic")
         return order
 
+    def topological_order_fast(self) -> list[int]:
+        """Stack-based Kahn: any valid order, no id-ordering guarantee.
+
+        Used where only *a* topological order matters (rank refreshes
+        in the incremental evaluator) — the heap in
+        :meth:`topological_order` buys deterministic id-sorted layers
+        that rank maintenance does not need.
+        """
+        indeg = {v: len(self.pred[v]) for v in self.members}
+        stack = [v for v, d in indeg.items() if d == 0]
+        order: list[int] = []
+        while stack:
+            v = stack.pop()
+            order.append(v)
+            for w in self.succ[v]:
+                indeg[w] -= 1
+                if indeg[w] == 0:
+                    stack.append(w)
+        if len(order) != len(self.members):
+            raise ValueError("quotient graph is cyclic")
+        return order
+
     # -------------------------------------------------------------- #
     # merge / unmerge (Step 3 machinery)
     # -------------------------------------------------------------- #
@@ -302,28 +348,38 @@ class QuotientGraph:
         Returns ``(vm, undo)`` where ``undo`` restores the previous state
         via :meth:`unmerge`.  The merged vertex inherits *no* processor
         assignment; callers set it explicitly.
+
+        The undo record is O(deg(a) + deg(b)): the dicts of ``a`` and
+        ``b`` are kept *by reference* (merge never mutates them — it
+        only unlinks them from the graph), and for each touched
+        neighbour we remember exactly which key was cut instead of
+        snapshotting its whole adjacency.  Unmerges must be LIFO with
+        respect to merges (nested merge trials unwind in reverse).
         """
         undo = {
             "a": a,
             "b": b,
-            "a_state": self._snapshot(a),
-            "b_state": self._snapshot(b),
-            "touched": {},
+            "a_state": (self.members[a], self.weight[a],
+                        self.succ[a], self.pred[a], self.proc[a]),
+            "b_state": (self.members[b], self.weight[b],
+                        self.succ[b], self.pred[b], self.proc[b]),
+            "cut_pred": [],   # (w, old, c): edge old->w removed from pred[w]
+            "cut_succ": [],   # (w, old, c): edge w->old removed from succ[w]
         }
         tasks = self.members[a] | self.members[b]
         vm = self.new_vertex(tasks)
         undo["vm"] = vm
         for old in (a, b):
-            for w, c in list(self.succ[old].items()):
+            for w, c in self.succ[old].items():
                 if w in (a, b):
                     continue
-                undo["touched"].setdefault(w, self._snapshot(w))
+                undo["cut_pred"].append((w, old, c))
                 del self.pred[w][old]
                 self.add_edge(vm, w, c)
-            for w, c in list(self.pred[old].items()):
+            for w, c in self.pred[old].items():
                 if w in (a, b):
                     continue
-                undo["touched"].setdefault(w, self._snapshot(w))
+                undo["cut_succ"].append((w, old, c))
                 del self.succ[w][old]
                 self.add_edge(w, vm, c)
         for old in (a, b):
@@ -335,28 +391,88 @@ class QuotientGraph:
         vm = undo["vm"]
         del self.members[vm], self.weight[vm]
         del self.succ[vm], self.pred[vm], self.proc[vm]
-        for v, st in [(undo["a"], undo["a_state"]), (undo["b"], undo["b_state"])]:
-            self._restore(v, st)
-        for w, st in undo["touched"].items():
-            self._restore(w, st)
+        for w, old, c in undo["cut_pred"]:
+            self.pred[w].pop(vm, None)
+            self.pred[w][old] = c
+        for w, old, c in undo["cut_succ"]:
+            self.succ[w].pop(vm, None)
+            self.succ[w][old] = c
+        for v, st in ((undo["a"], undo["a_state"]),
+                      (undo["b"], undo["b_state"])):
+            members, weight, succ, pred, proc = st
+            self.members[v] = members
+            self.weight[v] = weight
+            self.succ[v] = succ
+            self.pred[v] = pred
+            self.proc[v] = proc
 
-    def _snapshot(self, v: int) -> dict:
-        return {
-            "members": set(self.members[v]),
-            "weight": self.weight[v],
-            "succ": dict(self.succ[v]),
-            "pred": dict(self.pred[v]),
-            "proc": self.proc[v],
-        }
+    def cycle_through(self, v: int) -> list[int] | None:
+        """A cycle through ``v`` (or ``None``) — localized cycle probe.
 
-    def _restore(self, v: int, st: dict) -> None:
-        self.members[v] = set(st["members"])
-        self.weight[v] = st["weight"]
-        self.succ[v] = dict(st["succ"])
-        self.pred[v] = dict(st["pred"])
-        self.proc[v] = st["proc"]
+        After ``merge(a, b) -> vm`` on a previously acyclic graph, every
+        new cycle passes through ``vm`` (merge only rewires edges
+        incident to the merged vertex), so this is a complete acyclicity
+        check for the merge result.  2-cycles — the case Step 3 resolves
+        by triple merges — are detected first in O(deg(v)).
+        """
+        two = self.succ[v].keys() & self.pred[v].keys()
+        if two:
+            return [v, min(two)]
+        # iterative DFS from v's successors looking for v
+        parent: dict[int, int] = {}
+        stack = [(v, iter(self.succ[v]))]
+        seen = {v}
+        while stack:
+            u, it = stack[-1]
+            for w in it:
+                if w == v:
+                    cycle = [v]
+                    while u != v:
+                        cycle.append(u)
+                        u = parent[u]
+                    cycle.reverse()
+                    return cycle
+                if w not in seen:
+                    seen.add(w)
+                    parent[w] = u
+                    stack.append((w, iter(self.succ[w])))
+                    break
+            else:
+                stack.pop()
+        return None
 
     # -------------------------------------------------------------- #
+    def csr_arrays(self, order: Sequence[int] | None = None) -> FlatQuotient:
+        """Flat CSR snapshot of the current adjacency (see FlatQuotient).
+
+        ``order`` may supply a precomputed topological order to avoid
+        recomputing it.  The snapshot is immutable and detached: later
+        mutations of the quotient graph do not update it.
+        """
+        vid_list = list(order) if order is not None else \
+            self.topological_order()
+        n = len(vid_list)
+        pos = {v: i for i, v in enumerate(vid_list)}
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        for i, v in enumerate(vid_list):
+            indptr[i + 1] = indptr[i] + len(self.succ[v])
+        nnz = int(indptr[-1])
+        indices = np.empty(nnz, dtype=np.int64)
+        costs = np.empty(nnz, dtype=np.float64)
+        k = 0
+        for v in vid_list:
+            for w, c in self.succ[v].items():
+                indices[k] = pos[w]
+                costs[k] = c
+                k += 1
+        weight = np.fromiter((self.weight[v] for v in vid_list),
+                             dtype=np.float64, count=n)
+        return FlatQuotient(
+            vids=np.asarray(vid_list, dtype=np.int64),
+            pos=pos, indptr=indptr, indices=indices, costs=costs,
+            weight=weight,
+        )
+
     def assignment_array(self) -> np.ndarray:
         """Per-task block id (−1 where unassigned to any block)."""
         arr = np.full(self.wf.n, -1, dtype=np.int64)

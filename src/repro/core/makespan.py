@@ -14,10 +14,17 @@ heuristic avoids merging into it and Step 4's idle moves walk it.
 """
 from __future__ import annotations
 
-from .dag import QuotientGraph
+import numpy as np
+
+from .dag import FlatQuotient, QuotientGraph
 from .platform import Platform
 
-__all__ = ["bottom_weights", "makespan", "critical_path"]
+__all__ = [
+    "bottom_weights",
+    "bottom_weights_flat",
+    "makespan",
+    "critical_path",
+]
 
 
 def _speed(q: QuotientGraph, platform: Platform, v: int) -> float:
@@ -38,6 +45,45 @@ def bottom_weights(q: QuotientGraph, platform: Platform) -> dict[int, float]:
             l[v] = own + max(
                 c / beta + l[w] for w, c in q.succ[v].items()
             )
+    return l
+
+
+def bottom_weights_flat(
+    q: QuotientGraph,
+    platform: Platform,
+    flat: FlatQuotient | None = None,
+) -> np.ndarray:
+    """Array-driven bottom-weight sweep over a CSR snapshot.
+
+    Returns ``l`` indexed by *position* in ``flat`` (``flat.vids[i]`` is
+    the vertex at position ``i``).  Produces bit-identical values to
+    :func:`bottom_weights` — ``max`` over floats is order-independent
+    and the per-term arithmetic (``c / beta + l_child``) matches.  Used
+    by the incremental evaluator for its full (re)builds; the dict
+    version stays as the mutation-friendly reference.
+    """
+    if flat is None:
+        flat = q.csr_arrays()
+    n = flat.n
+    beta = platform.bandwidth
+    l = np.empty(n, dtype=np.float64)
+    own = np.empty(n, dtype=np.float64)
+    for i in range(n):
+        own[i] = flat.weight[i] / _speed(q, platform, int(flat.vids[i]))
+    indptr, indices, costs = flat.indptr, flat.indices, flat.costs
+    for i in range(n - 1, -1, -1):
+        s, e = indptr[i], indptr[i + 1]
+        if s == e:
+            l[i] = own[i]
+        elif e - s < 16:
+            best = -np.inf
+            for k in range(s, e):
+                cand = costs[k] / beta + l[indices[k]]
+                if cand > best:
+                    best = cand
+            l[i] = own[i] + best
+        else:
+            l[i] = own[i] + float(np.max(costs[s:e] / beta + l[indices[s:e]]))
     return l
 
 

@@ -38,9 +38,11 @@ from .dag import Workflow
 
 __all__ = [
     "simulate_peak",
+    "simulate_peak_members",
     "exact_min_peak",
     "greedy_min_peak",
     "block_requirement",
+    "block_requirement_witness",
     "EXACT_LIMIT",
 ]
 
@@ -91,6 +93,46 @@ def simulate_peak(
         done[u] = True
     if not all(done):
         raise ValueError("order does not cover the block")
+    return peak
+
+
+def simulate_peak_members(
+    wf: Workflow,
+    members,
+    order: Sequence[int],
+) -> float:
+    """Transient peak of executing block ``members`` of ``wf`` in
+    ``order`` — like :func:`simulate_peak` but directly on the original
+    workflow (no subgraph/boundary materialization), with edges leaving
+    or entering ``members`` treated as external per the module memory
+    model.  ``order`` must cover ``members`` exactly and respect
+    precedence *within* the block (not checked — this is the hot-path
+    witness evaluator; :func:`simulate_peak` is the checked variant).
+
+    Excludes the persistent base (callers add Σ persistent).
+    """
+    members = members if isinstance(members, (set, frozenset)) \
+        else set(members)
+    live = 0.0
+    peak = 0.0
+    for u in order:
+        int_in = 0.0
+        ext_in = 0.0
+        for p, c in wf.pred[u].items():
+            if p in members:
+                int_in += c
+            else:
+                ext_in += c
+        int_out = 0.0
+        out_total = 0.0
+        for v, c in wf.succ[u].items():
+            out_total += c
+            if v in members:
+                int_out += c
+        during = live + ext_in + wf.mem[u] + out_total
+        if during > peak:
+            peak = during
+        live += int_out - int_in
     return peak
 
 
@@ -189,6 +231,88 @@ def greedy_min_peak(
     return (peak, order) if return_order else peak
 
 
+def greedy_min_peak_members(
+    wf: Workflow,
+    nodes: Sequence[int],
+) -> tuple[float, list[int]]:
+    """Subgraph-free :func:`greedy_min_peak` over block ``nodes``.
+
+    Produces bit-identical peaks/orders to building the induced
+    sub-workflow and running :func:`greedy_min_peak` on it: internal
+    input volumes accumulate in the sub-``add_edge`` order (producers
+    in ``nodes`` order), the ``during`` sum uses the same association,
+    and heap tie-breaks use the position in ``nodes`` (the local id of
+    the subgraph construction).  Avoiding the Workflow materialization
+    is what keeps Step 2's recursive splitting and the requirement
+    cache misses affordable at 30k tasks.
+    """
+    n = len(nodes)
+    if n == 0:
+        return 0.0, []
+    local = {u: i for i, u in enumerate(nodes)}
+    during = [0.0] * n
+    delta = [0.0] * n
+    indeg = [0] * n
+    int_in = [0.0] * n
+    # internal input volume, accumulated in subgraph add_edge order
+    for u in nodes:
+        for v, c in wf.succ[u].items():
+            j = local.get(v)
+            if j is not None:
+                int_in[j] += c
+    for i, u in enumerate(nodes):
+        int_out = 0.0
+        ext_out = 0.0
+        for v, c in wf.succ[u].items():
+            if v in local:
+                int_out += c
+            else:
+                ext_out += c
+        ext_in = 0.0
+        for v, c in wf.pred[u].items():
+            if v in local:
+                indeg[i] += 1
+            else:
+                ext_in += c
+        during[i] = ext_in + wf.mem[u] + int_out + ext_out
+        delta[i] = int_out - int_in[i]
+
+    succ_local: list[list[int]] = [
+        [j for v in wf.succ[u] if (j := local.get(v)) is not None]
+        for u in nodes
+    ]
+
+    def run(keys: list[tuple]) -> tuple[float, list[int]]:
+        deg = list(indeg)
+        heap = [(keys[i], i) for i in range(n) if deg[i] == 0]
+        heapq.heapify(heap)
+        live = peak = 0.0
+        order: list[int] = []
+        heappush, heappop = heapq.heappush, heapq.heappop
+        while heap:
+            _, i = heappop(heap)
+            d = live + during[i]
+            if d > peak:
+                peak = d
+            live += delta[i]
+            order.append(i)
+            for j in succ_local[i]:
+                deg[j] -= 1
+                if deg[j] == 0:
+                    heappush(heap, (keys[j], j))
+        return peak, order
+
+    p1, o1 = run([(delta[i] >= 0, during[i], i) for i in range(n)])
+    # any traversal peaks at least max(during) (live is nonnegative);
+    # when variant 1 attains that bound, variant 2 cannot do better and
+    # the tie-break keeps (p1, o1) anyway — skip the second run.
+    if p1 > max(during):
+        p2, o2 = run([(during[i], delta[i], i) for i in range(n)])
+        if p2 < p1:
+            return p2, [nodes[i] for i in o2]
+    return p1, [nodes[i] for i in o1]
+
+
 def block_requirement(
     wf: Workflow,
     nodes: Sequence[int],
@@ -201,21 +325,48 @@ def block_requirement(
     module-level memory model.
     """
     nodes = list(nodes)
-    sub, mapping = wf.subgraph(nodes)
-    ext_in, ext_out = wf.boundary_costs(nodes)
     # persistent residency (placement layer: weights/caches) adds a
     # traversal-independent base to the block's requirement
     base = sum(wf.persistent[u] for u in nodes)
-    if sub.n <= exact_limit:
+    if len(nodes) <= exact_limit:
+        sub, mapping = wf.subgraph(nodes)
+        ext_in, ext_out = wf.boundary_costs(nodes)
         peak = base + exact_min_peak(sub, ext_in, ext_out)
         if not return_order:
             return peak
         # exact DP does not retain the order; fall back to the greedy
         # order (whose simulated peak may be slightly above ``peak``).
-        _, order = greedy_min_peak(sub, ext_in, ext_out, return_order=True)
-        return peak, [mapping[i] for i in order]
-    result = greedy_min_peak(sub, ext_in, ext_out, return_order=return_order)
+        _, order = greedy_min_peak_members(wf, nodes)
+        return peak, order
+    peak, order = greedy_min_peak_members(wf, nodes)
     if return_order:
-        peak, order = result
-        return base + peak, [mapping[i] for i in order]
-    return base + result
+        return base + peak, order
+    return base + peak
+
+
+def block_requirement_witness(
+    wf: Workflow,
+    nodes: Sequence[int],
+    exact_limit: int = EXACT_LIMIT,
+) -> tuple[float, float, float, list[int]]:
+    """``(r, base, peak_w, order)`` — requirement plus traversal witness.
+
+    ``r`` is :func:`block_requirement`'s value (base + min-peak
+    estimate); ``base`` the persistent residency; ``order`` a concrete
+    traversal of the block (original task ids) whose simulated transient
+    peak is ``peak_w``.  For blocks priced by the exact DP, the greedy
+    order serves as witness, so ``peak_w`` may exceed ``r - base``.  The
+    witness is what makes merged requirements composable: the
+    merge-aware cache (:class:`repro.core.heuristic._Requirements`)
+    concatenates part witnesses and bounds the result without
+    re-running the traversal search.
+    """
+    nodes = list(nodes)
+    base = sum(wf.persistent[u] for u in nodes)
+    peak_g, order = greedy_min_peak_members(wf, nodes)
+    if len(nodes) <= exact_limit:
+        sub, _ = wf.subgraph(nodes)
+        ext_in, ext_out = wf.boundary_costs(nodes)
+        peak = exact_min_peak(sub, ext_in, ext_out)
+        return base + min(peak, peak_g), base, peak_g, order
+    return base + peak_g, base, peak_g, order

@@ -22,6 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships the TPU compiler params as TPUCompilerParams;
+# newer releases renamed it to CompilerParams.  Support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 __all__ = ["flash_attention_bhsd"]
 
 _NEG_INF = -1e30
@@ -118,7 +123,7 @@ def flash_attention_bhsd(
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -105,6 +105,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax < 0.5: one dict per program
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     if save_hlo is not None:
         import zstandard

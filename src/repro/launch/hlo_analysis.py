@@ -258,7 +258,12 @@ def analyze_hlo(hlo: str) -> HloStats:
             if not dm:
                 continue
             res = _shape_bytes(dm.group(2), dm.group(3))
-            pm = re.search(r"\(\s*%param_(\d+)", cl)
+            # first operand of the slice/gather; older jax prints the
+            # operand type before the name ("(f32[...]{...} %param_1.1"),
+            # newer jax prints "(%param_1" directly — anchor on the
+            # opcode's paren so a later index operand can't match
+            pm = re.search(
+                r"(?:dynamic-slice|gather)\(\s*(?:\S+\s+)?%param_(\d+)", cl)
             if not pm:
                 continue
             idx = int(pm.group(1))

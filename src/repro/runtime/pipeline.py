@@ -65,8 +65,10 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh: Mesh,
         steps = mu + n_stages - 1
         # pvary: the carry becomes device-varying after the first
         # ppermute, so its initial value must be typed as varying too
-        buf = jax.lax.pvary(jnp.zeros_like(xs_local[0]), (axis,))
-        out = jax.lax.pvary(jnp.zeros_like(xs_local), (axis,))
+        # (jax < 0.5 has no explicit varying types: identity there)
+        pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+        buf = pvary(jnp.zeros_like(xs_local[0]), (axis,))
+        out = pvary(jnp.zeros_like(xs_local), (axis,))
 
         def step(carry, t):
             buf, out = carry

@@ -1,0 +1,125 @@
+"""Minimal stand-in for the optional ``hypothesis`` dependency.
+
+The container image does not ship ``hypothesis``; rather than skip every
+property test, this module provides a tiny seeded-random implementation
+of the small API surface the test-suite uses:
+
+* ``st.integers / floats / booleans / sampled_from / composite``
+* ``@given(...)`` — runs the test body ``max_examples`` times with
+  pseudo-random draws (deterministic: seeded per test name),
+* ``@settings(max_examples=..., deadline=...)`` — honoured for
+  ``max_examples``; ``deadline`` is ignored.
+
+No shrinking, no database, no edge-case heuristics — this is a smoke
+fallback, not a replacement.  Test modules import it as::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # pragma: no cover
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+
+
+class _Strategy:
+    """A strategy is just a callable drawing one value from an RNG."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0,
+            allow_nan: bool = True, allow_infinity: bool = True) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def _composite(fn):
+    """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def draw_value(rng: random.Random):
+            def draw(strategy: _Strategy):
+                return strategy.example(rng)
+
+            return fn(draw, *args, **kwargs)
+
+        return _Strategy(draw_value)
+
+    return factory
+
+
+st = SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+    composite=_composite,
+)
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording ``max_examples`` for a later ``@given``."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the wrapped test repeatedly with seeded pseudo-random draws."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # `@settings` above `@given` marks the wrapper; below, the fn.
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"fallback:{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn_args = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn_args, **kwargs, **drawn_kw)
+
+        # `@settings` may be applied *above* `@given`; re-export the mark.
+        wrapper._fallback_max_examples = getattr(
+            fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+        # Hide the drawn parameters from pytest (it would otherwise look
+        # for fixtures named after them).  Drawn positionals fill the
+        # *last* positional slots; drawn keywords are removed by name.
+        params = list(inspect.signature(fn).parameters.values())
+        if arg_strategies:
+            params = params[: -len(arg_strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        wrapper.__wrapped__ = None
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -3,7 +3,10 @@ instances: validity (memory, acyclicity, injectivity) and the paper's
 qualitative claims (heuristic beats baseline; big fans gain most)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     FAMILIES,

@@ -1,0 +1,260 @@
+"""Property tests for the incremental scheduling evaluator.
+
+The load-bearing invariant: after ANY sequence of engine mutations
+(merges, triple merges, processor reassignments, swaps, rollbacks) the
+maintained bottom weights are *bit-identical* to a from-scratch
+:func:`repro.core.makespan.bottom_weights` sweep, and the makespan /
+critical path follow.  The randomized suite below drives well over 200
+mutation sequences; it runs with the real ``hypothesis`` when present
+and with the seeded fallback otherwise (the deterministic loops below
+do not depend on either).
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import Platform, Processor
+from repro.core.dag import QuotientGraph, Workflow, build_quotient
+from repro.core.incremental import IncrementalEvaluator
+from repro.core.makespan import bottom_weights, critical_path, makespan
+from repro.core.workflows import random_layered_dag
+
+
+def make_platform(k: int = 8, seed: int = 0) -> Platform:
+    rng = random.Random(seed)
+    procs = [
+        Processor(f"p{i}", rng.choice([1.0, 2.0, 4.0, 8.0]),
+                  rng.choice([8.0, 32.0, 192.0]))
+        for i in range(k)
+    ]
+    return Platform(procs, bandwidth=rng.choice([0.5, 1.0, 2.0]))
+
+
+def make_quotient(n: int, blocks: int, seed: int) -> QuotientGraph:
+    wf = random_layered_dag(n, seed=seed)
+    rng = random.Random(seed + 1)
+    block_of = [rng.randrange(blocks) for _ in range(n)]
+    # contiguity not required: random groupings may be cyclic, retry a
+    # few relabelings biased toward topological position
+    order = wf.topological_order()
+    for attempt in range(10):
+        q = build_quotient(wf, block_of)
+        if q.is_acyclic():
+            return q
+        pos = {u: i for i, u in enumerate(order)}
+        block_of = [min(blocks - 1, pos[u] * blocks // n)
+                    for u in range(n)]
+    q = build_quotient(wf, block_of)
+    assert q.is_acyclic()
+    return q
+
+
+def mutate_once(ev: IncrementalEvaluator, platform: Platform,
+                rng: random.Random) -> None:
+    """One random committed mutation through the engine."""
+    q = ev.q
+    verts = sorted(q.members)
+    op = rng.random()
+    if op < 0.45 and len(verts) >= 2:
+        # merge a random adjacent pair (with 2-cycle escalation)
+        v = rng.choice(verts)
+        nbrs = sorted(set(q.pred[v]) | set(q.succ[v]))
+        if not nbrs:
+            return
+        vp = rng.choice(nbrs)
+        ev.begin()
+        vm, cycle = ev.merge(v, vp)
+        if cycle is not None and len(cycle) == 2:
+            other = cycle[0] if cycle[0] != vm else cycle[1]
+            vm, cycle = ev.merge(vm, other)
+        if cycle is not None:
+            ev.rollback()
+            return
+        ev.commit()
+        if rng.random() < 0.7:
+            ev.set_proc(vm, rng.randrange(platform.k))
+    elif op < 0.75:
+        v = rng.choice(verts)
+        ev.set_proc(v, rng.choice([None] + list(range(platform.k))))
+    elif len(verts) >= 2:
+        v, w = rng.sample(verts, 2)
+        ev.swap(v, w)
+
+
+class TestEquivalence:
+    def test_randomized_mutation_sequences(self):
+        """>= 200 randomized sequences: engine == from-scratch sweep."""
+        sequences = 0
+        for seed in range(70):
+            platform = make_platform(k=6, seed=seed)
+            q = make_quotient(30 + seed % 17, 6 + seed % 5, seed)
+            ev = IncrementalEvaluator(q, platform)
+            ev.assert_consistent()
+            rng = random.Random(1000 + seed)
+            for step in range(3):
+                mutate_once(ev, platform, rng)
+                sequences += 1
+                ev.assert_consistent()
+                assert ev.makespan() == makespan(q, platform)
+        assert sequences >= 200
+
+    def test_rollback_restores_exact_state(self):
+        platform = make_platform(k=5, seed=3)
+        q = make_quotient(40, 8, 3)
+        ev = IncrementalEvaluator(q, platform)
+        before_l = dict(ev.l)
+        before_succ = {v: dict(q.succ[v]) for v in q.members}
+        before_proc = dict(q.proc)
+        rng = random.Random(7)
+        verts = sorted(q.members)
+        for _ in range(20):
+            v = rng.choice(verts)
+            nbrs = sorted(set(q.pred[v]) | set(q.succ[v]))
+            ev.begin()
+            ev.set_proc(v, rng.randrange(platform.k))
+            if nbrs:
+                ev.merge(v, rng.choice(nbrs))
+            ev.rollback()
+            assert ev.l == before_l
+            assert {x: dict(q.succ[x]) for x in q.members} == before_succ
+            assert dict(q.proc) == before_proc
+        ev.assert_consistent()
+
+    def test_critical_path_matches_reference(self):
+        for seed in range(10):
+            platform = make_platform(k=6, seed=seed)
+            q = make_quotient(35, 7, seed)
+            rng = random.Random(seed)
+            for v in sorted(q.members):
+                if rng.random() < 0.8:
+                    q.proc[v] = rng.randrange(platform.k)
+            ev = IncrementalEvaluator(q, platform)
+            ref = critical_path(q, platform)
+            got = ev.critical_path()
+            # both must realize the makespan; tie-breaks may differ
+            l = bottom_weights(q, platform)
+            assert l[got[0]] == makespan(q, platform)
+            assert got[0] == ref[0] or l[got[0]] == l[ref[0]]
+            beta = platform.bandwidth
+            for a, b in zip(got, got[1:]):
+                assert b in q.succ[a]
+                assert l[a] == pytest.approx(
+                    q.weight[a] / (platform.procs[q.proc[a]].speed
+                                   if q.proc[a] is not None else 1.0)
+                    + q.succ[a][b] / beta + l[b])
+
+
+class TestProbes:
+    def _setup(self, seed):
+        platform = make_platform(k=6, seed=seed)
+        q = make_quotient(40, 8, seed)
+        rng = random.Random(seed + 5)
+        for v in sorted(q.members):
+            q.proc[v] = rng.randrange(platform.k)
+        return platform, q, rng
+
+    def test_probe_swap_exact(self):
+        """probe_swap == makespan of actually applying the swap."""
+        checked = 0
+        for seed in range(12):
+            platform, q, rng = self._setup(seed)
+            ev = IncrementalEvaluator(q, platform)
+            verts = sorted(q.members)
+            for _ in range(12):
+                v, w = rng.sample(verts, 2)
+                got = ev.probe_swap(v, w, float("inf"))
+                q.proc[v], q.proc[w] = q.proc[w], q.proc[v]
+                ref = makespan(q, platform)
+                q.proc[v], q.proc[w] = q.proc[w], q.proc[v]
+                assert got == ref
+                ev.assert_consistent()  # probe left no trace
+                checked += 1
+        assert checked >= 100
+
+    def test_probe_swap_bound_rejections_sound(self):
+        """None from a bounded probe really means ms >= bound."""
+        for seed in range(8):
+            platform, q, rng = self._setup(seed)
+            ev = IncrementalEvaluator(q, platform)
+            ms0 = ev.makespan()
+            verts = sorted(q.members)
+            for _ in range(10):
+                v, w = rng.sample(verts, 2)
+                got = ev.probe_swap(v, w, ms0)
+                q.proc[v], q.proc[w] = q.proc[w], q.proc[v]
+                ref = makespan(q, platform)
+                q.proc[v], q.proc[w] = q.proc[w], q.proc[v]
+                if got is None:
+                    assert ref >= ms0
+                else:
+                    assert got == ref and ref < ms0
+
+    def test_probe_merge_exact(self):
+        for seed in range(10):
+            platform, q, rng = self._setup(seed + 100)
+            ev = IncrementalEvaluator(q, platform)
+            verts = sorted(q.members)
+            for v in verts:
+                nbrs = sorted(set(q.pred[v]) | set(q.succ[v]))
+                if not nbrs:
+                    continue
+                vp = nbrs[0]
+                # probes cannot escalate 2-cycles; skip those pairs
+                down, up = (vp, v) if vp in q.succ[v] else (v, vp)
+                if q.succ[up].keys() & q.pred[down].keys():
+                    continue
+                proc = q.proc[vp]
+                got = ev.probe_merge(v, vp, proc, float("inf"))
+                vm, undo = q.merge(v, vp)
+                cyclic = not q.is_acyclic()
+                if not cyclic:
+                    q.proc[vm] = proc
+                    ref = makespan(q, platform)
+                q.unmerge(undo)
+                if cyclic:
+                    assert got is None
+                else:
+                    assert got == ref
+                ev.assert_consistent()
+
+
+class TestSwapPassPruning:
+    def test_pruned_equals_exhaustive(self):
+        """Critical-path pruning must not change Step 4's outcome."""
+        from repro.core.heuristic import _Requirements, _swap_pass
+
+        for seed in range(8):
+            platform = make_platform(k=10, seed=seed)
+            results = []
+            for exhaustive in (False, True):
+                q = make_quotient(36, 8, seed)
+                wf = q.wf
+                procs = random.Random(seed).sample(
+                    range(platform.k), q.n_vertices)
+                for v, p in zip(sorted(q.members), procs):
+                    q.proc[v] = p
+                ev = IncrementalEvaluator(q, platform)
+                reqs = _Requirements(wf, 0)
+                _swap_pass(wf, platform, q, reqs, ev,
+                           exhaustive=exhaustive)
+                results.append(ev.makespan())
+            assert results[0] == pytest.approx(results[1])
+
+
+@pytest.mark.slow
+def test_end_to_end_large_instance():
+    """dag_het_part completes and validates on a mid-size instance."""
+    from repro.core import (
+        dag_het_part, default_cluster, generate_workflow, validate_mapping,
+    )
+
+    plat = default_cluster()
+    wf = generate_workflow("blast", 4000, seed=1, platform=plat)
+    res = dag_het_part(wf, plat, kprime=[4, 13, 36])
+    assert res is not None
+    assert validate_mapping(wf, res) == []

@@ -3,7 +3,10 @@ checks of the greedy heuristic against the exact subset DP."""
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     Workflow,

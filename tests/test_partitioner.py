@@ -1,7 +1,10 @@
 """Acyclic-partitioner tests: the acyclicity invariant is the paper's
 hard requirement (quotient must be a DAG for the makespan to exist)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     Workflow,

@@ -4,7 +4,10 @@ rwkv hillclimb in EXPERIMENTS.md §Perf."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.models.rwkv import wkv_chunked, wkv_scan_ref
 
