@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: verify test fast bench bench-large
+.PHONY: verify test fast bench bench-large bench-sweep
 
 # tier-1 verification (ROADMAP.md)
 verify:
@@ -24,3 +24,7 @@ bench:
 # paper-scale runtime tier (n = 10000 / 30000) -> BENCH_runtime.json
 bench-large:
 	python -m benchmarks.bench_runtime --large
+
+# parallel-vs-serial k' sweep on the n=1000 suite -> BENCH_runtime.json
+bench-sweep:
+	python -m benchmarks.bench_runtime --sweep

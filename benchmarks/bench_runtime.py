@@ -7,22 +7,26 @@ is the claim under test.
 
 ``python -m benchmarks.bench_runtime`` runs the quick tier (200/1000
 tasks).  ``--large`` runs the paper-scale tier (10000/30000 tasks).
-Both tiers append their results to ``BENCH_runtime.json`` so the perf
-trajectory is tracked across PRs (the file maps tier -> per-size
-aggregate plus per-family rows; it is rewritten after every size group
-so a partial run still leaves usable data on disk).
+``--sweep`` runs the parallel-vs-serial k' sweep comparison on the
+n=1000 suite (``make bench-sweep``): per worker count, wall-clock and
+the best makespan, asserting the parallel sweep is bit-identical to
+serial.  All tiers append their results to ``BENCH_runtime.json`` so
+the perf trajectory is tracked across PRs (the file maps tier ->
+per-size aggregate plus per-family rows; it is rewritten after every
+size group so a partial run still leaves usable data on disk).
 """
 from __future__ import annotations
 
 import json
+import os
 import platform as _platform
 import sys
 import time
 from pathlib import Path
 
-from repro.core import default_cluster, real_like_workflows
+from repro.core import default_cluster, real_like_workflows, schedule
 
-from .common import emit, geomean, run_pair, workflow_suite
+from .common import KPRIME, emit, geomean, run_pair, workflow_suite
 
 RESULT_FILE = Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
 
@@ -89,8 +93,64 @@ def run(sizes=(200, 1000), seeds=(1,), tier: str = "quick",
     return out
 
 
+def run_sweep(n: int = 1000, seeds=(1,), workers=None,
+              write_json: bool = True) -> dict:
+    """Parallel-vs-serial k' sweep on the n=1000 suite (``--sweep``).
+
+    For every deterministic family instance, runs the same sweep with
+    each worker count, asserts the best makespans are bit-identical to
+    serial, and appends the wall-clock timings to the ``sweep`` tier of
+    ``BENCH_runtime.json``.
+    """
+    if workers is None:
+        workers = (1, min(4, os.cpu_count() or 1))
+    # the serial baseline always runs, exactly once, and first
+    workers = tuple(dict.fromkeys((1,) + tuple(workers)))
+    plat = default_cluster()
+    results = _load_results()
+    tier_out = results.setdefault("sweep", {})
+    rows: list[dict] = []
+    for family, n_, seed, wf in workflow_suite(plat, (n,), seeds):
+        row: dict = {"family": family, "seed": seed}
+        serial_ms = None
+        for w in workers:
+            t0 = time.perf_counter()
+            rep = schedule(wf, plat, algorithm="dag_het_part",
+                           kprime=KPRIME, workers=w)
+            dt = time.perf_counter() - t0
+            row[f"workers={w}_s"] = dt
+            if serial_ms is None:
+                serial_ms = rep.makespan
+            else:
+                assert rep.makespan == serial_ms, (
+                    f"parallel sweep diverged on {family}: "
+                    f"{rep.makespan} != {serial_ms} (workers={w})"
+                )
+            emit(f"sweep/n={n}/{family}/workers={w}_s", dt, "")
+        row["makespan"] = serial_ms
+        w_max = max(workers)
+        if w_max > 1 and row.get(f"workers={w_max}_s"):
+            row["speedup"] = row["workers=1_s"] / row[f"workers={w_max}_s"]
+            emit(f"sweep/n={n}/{family}/speedup_w{w_max}",
+                 row["speedup"], "vs_serial;identical_makespan")
+        rows.append(row)
+        tier_out[f"n={n}"] = {
+            "workers": list(workers),
+            "kprime": list(KPRIME),
+            "cpus": os.cpu_count(),  # speedup ceiling context
+            "families": rows,
+            "speedup_geomean": geomean(
+                [r.get("speedup") for r in rows]),
+        }
+        if write_json:
+            _write_results(results)
+    return tier_out
+
+
 if __name__ == "__main__":
     if "--large" in sys.argv:
         run(sizes=(10000, 30000), seeds=(1,), tier="large")
+    elif "--sweep" in sys.argv:
+        run_sweep()
     else:
         run()

@@ -16,10 +16,9 @@ import numpy as np
 
 from repro.core import (
     FAMILIES,
-    dag_het_mem,
-    dag_het_part,
     generate_workflow,
     real_like_workflows,
+    schedule,
     validate_mapping,
 )
 
@@ -43,24 +42,30 @@ class RunResult:
         return None
 
 
-def run_pair(wf, platform, kprime=None, validate: bool = False):
-    """Run baseline + heuristic on one workflow; returns RunResult."""
+def run_pair(wf, platform, kprime=None, validate: bool = False,
+             workers: int = 1):
+    """Run baseline + heuristic on one workflow; returns RunResult.
+
+    Both runs go through the unified Scheduler API; ``workers > 1``
+    parallelizes the heuristic's k' sweep (bit-identical makespans).
+    """
     t0 = time.perf_counter()
-    base = dag_het_mem(wf, platform)
+    base = schedule(wf, platform, algorithm="dag_het_mem")
     t1 = time.perf_counter()
-    het = dag_het_part(wf, platform, kprime=kprime or KPRIME)
+    het = schedule(wf, platform, algorithm="dag_het_part",
+                   kprime=kprime or KPRIME, workers=workers)
     t2 = time.perf_counter()
     if validate:
-        if base is not None:
-            assert validate_mapping(wf, base) == [], wf.name
-        if het is not None:
-            assert validate_mapping(wf, het) == [], wf.name
+        if base.feasible:
+            assert validate_mapping(wf, base.best) == [], wf.name
+        if het.feasible:
+            assert validate_mapping(wf, het.best) == [], wf.name
     return RunResult(
         family=wf.name.split("_")[0] if wf.name else "?",
         n_tasks=wf.n,
         seed=0,
-        base_ms=base.makespan if base else None,
-        het_ms=het.makespan if het else None,
+        base_ms=base.makespan,
+        het_ms=het.makespan,
         base_time_s=t1 - t0,
         het_time_s=t2 - t1,
     )

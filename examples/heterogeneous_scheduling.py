@@ -8,21 +8,27 @@ Fig. 4.
 Run:  PYTHONPATH=src python examples/heterogeneous_scheduling.py
 """
 from repro.core import (
+    Scheduler,
+    SchedulerConfig,
     bottom_weights,
-    dag_het_mem,
-    dag_het_part,
     default_cluster,
     generate_workflow,
     less_het_cluster,
     more_het_cluster,
     no_het_cluster,
+    schedule,
 )
 
+SWEEP = [1, 4, 9, 19, 36]
 
-def describe_mapping(tag, wf, res, plat):
-    if res is None:
-        print(f"{tag}: no valid mapping")
+
+def describe_mapping(tag, wf, report, plat):
+    if not report.feasible:
+        inf = report.infeasibility
+        print(f"{tag}: no valid mapping "
+              f"(stage '{inf.stage}': {inf.reason})")
         return
+    res = report.best
     q = res.quotient
     print(f"{tag}: makespan {res.makespan:.1f} with {q.n_vertices} blocks")
     by_speed = {}
@@ -39,9 +45,19 @@ def main():
     wf = generate_workflow("montage", 300, seed=2, platform=plat)
     print(f"workflow: montage, {wf.n} tasks, {wf.n_edges} edges\n")
 
-    base = dag_het_mem(wf, plat)
+    base = schedule(wf, plat, algorithm="dag_het_mem")
     describe_mapping("DagHetMem (memory-only baseline)", wf, base, plat)
-    het = dag_het_part(wf, plat, kprime=[1, 4, 9, 19, 36])
+
+    # the sweep reports through the on_sweep_result callback — the one
+    # channel shared by verbose mode, benchmarks and the process pool
+    print("DagHetPart k' sweep:")
+    het = Scheduler(SchedulerConfig(
+        kprime=SWEEP,
+        on_sweep_result=lambda p: print(
+            f"  k'={p.k_prime}: "
+            + (f"makespan {p.makespan:.1f}" if p.feasible
+               else f"infeasible at stage '{p.failed_stage}'")),
+    )).schedule(wf, plat)
     describe_mapping("DagHetPart (heterogeneity-aware)", wf, het, plat)
     print(f"\nimprovement: {base.makespan / het.makespan:.2f}x\n")
 
@@ -51,9 +67,9 @@ def main():
                      ("default", default_cluster()),
                      ("MoreHet", more_het_cluster())):
         wfc = generate_workflow("montage", 300, seed=2, platform=cl)
-        b = dag_het_mem(wfc, cl)
-        h = dag_het_part(wfc, cl, kprime=[1, 4, 9, 19, 36])
-        if b and h:
+        b = schedule(wfc, cl, algorithm="dag_het_mem")
+        h = schedule(wfc, cl, kprime=SWEEP)
+        if b.feasible and h.feasible:
             print(f"  {name:8s}: relative makespan "
                   f"{100 * h.makespan / b.makespan:5.1f}%")
 

@@ -16,12 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Platform, Processor, Workflow, dag_het_part
+from repro.core import Platform, Processor, Workflow, schedule
 from repro.runtime.pipeline import pipeline_apply, stack_stage_params
 
 
 def plan_stages(n_layers: int, n_stages: int) -> list[list[int]]:
-    """Let DagHetPart split a layer chain into pipeline stages."""
+    """Let the scheduler split a layer chain into pipeline stages."""
     wf = Workflow(name="mlp-chain")
     prev = None
     for i in range(n_layers):
@@ -33,7 +33,9 @@ def plan_stages(n_layers: int, n_stages: int) -> list[list[int]]:
     # memory: 2 layers of weights (1.0 each) + transient activations
     plat = Platform([Processor(f"d{i}", 1.0, n_layers / n_stages + 1.5)
                      for i in range(n_stages)], bandwidth=10.0)
-    res = dag_het_part(wf, plat, kprime=[n_stages])
+    report = schedule(wf, plat, kprime=[n_stages])
+    assert report.feasible, report.infeasibility
+    res = report.best
     stages = [sorted(m) for m in res.quotient.members.values()]
     stages.sort(key=min)
     print(f"scheduler split {n_layers} layers into "

@@ -1,8 +1,12 @@
 """Quickstart: the paper's scheduler + the framework in 60 seconds.
 
-1. Generate a memory-constrained workflow, map it with the baseline
-   (DagHetMem) and the four-step heuristic (DagHetPart), compare
-   makespans — the paper's core experiment in miniature.
+1. Map a memory-constrained workflow through the unified Scheduler
+   API: the baseline (DagHetMem) and the four-step heuristic
+   (DagHetPart) are stage pipelines behind one facade, every run
+   returns a ScheduleReport (best mapping or a structured
+   infeasibility, k'→makespan sweep trace, per-stage timings), and
+   ``workers>1`` sweeps k' on a process pool — the paper's core
+   experiment in miniature.
 2. Lower one of the assigned architectures to a workflow DAG and let
    the same scheduler place it on a mixed TPU fleet.
 3. Train a small LM for a few steps through the fault-tolerant runtime.
@@ -14,10 +18,11 @@ import tempfile
 from repro.configs import get_config, get_smoke_config, shape_by_name
 from repro.configs.base import ShapeConfig
 from repro.core import (
-    dag_het_mem,
-    dag_het_part,
+    Scheduler,
+    SchedulerConfig,
     default_cluster,
     generate_workflow,
+    schedule,
     validate_mapping,
 )
 from repro.core.autoshard import plan
@@ -29,15 +34,26 @@ def part1_paper_core():
     print("=== 1. DAGP-PM: baseline vs four-step heuristic ===")
     plat = default_cluster()
     wf = generate_workflow("blast", 400, seed=1, platform=plat)
-    base = dag_het_mem(wf, plat)
-    het = dag_het_part(wf, plat, kprime=[1, 4, 9, 19, 36])
-    assert validate_mapping(wf, base) == []
-    assert validate_mapping(wf, het) == []
+    # one facade for both algorithms; reports are never None
+    base = schedule(wf, plat, algorithm="dag_het_mem")
+    het = Scheduler(SchedulerConfig(
+        algorithm="dag_het_part", kprime=[1, 4, 9, 19, 36], workers=2,
+    )).schedule(wf, plat)
+    assert base.feasible and het.feasible
+    assert validate_mapping(wf, base.best) == []
+    assert validate_mapping(wf, het.best) == []
     print(f"workflow: blast, {wf.n} tasks on {plat.k} heterogeneous procs")
     print(f"DagHetMem  makespan: {base.makespan:10.1f}  "
-          f"(blocks: {base.k_used})")
+          f"(blocks: {base.summary.k_used})")
     print(f"DagHetPart makespan: {het.makespan:10.1f}  "
-          f"(blocks: {het.k_used})")
+          f"(blocks: {het.summary.k_used})")
+    trace = ", ".join(
+        f"k'={p.k_prime}:" + (f"{p.makespan:.0f}" if p.feasible else "inf")
+        for p in het.sweep)
+    print(f"sweep trace ({het.workers} workers): {trace}")
+    slowest = max(het.stage_times, key=het.stage_times.get)
+    print(f"stage timings: hottest stage '{slowest}' "
+          f"({het.stage_times[slowest]:.2f}s of {het.total_time_s:.2f}s)")
     print(f"improvement: {base.makespan / het.makespan:.2f}x "
           f"(paper: 2.44x average)\n")
 
@@ -51,6 +67,9 @@ def part2_model_placement():
     print(f"mixtral-8x7b decode_32k on 64 mixed chips:")
     print(f"  stages: {p.n_stages}, valid: {p.valid}")
     print(f"  est step latency: {p.est_step_s * 1e3:.2f} ms")
+    best_kp = p.report.summary.k_prime
+    print(f"  k' sweep: {len(p.report.sweep)} attempts, "
+          f"best at k'={best_kp}")
     spread = len(set(p.expert_placement.values()))
     print(f"  expert placement spread: {spread} stages "
           f"(emergent expert parallelism)\n")

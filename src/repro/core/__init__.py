@@ -13,9 +13,36 @@ heterogeneous platforms (Kulagina, Meyerhenke, Benoit — ICPP'24):
   (bounded probes + transactional merges for the heuristic hot paths),
 * :mod:`repro.core.baseline` — DagHetMem,
 * :mod:`repro.core.heuristic` — DagHetPart (the four-step heuristic),
+* :mod:`repro.core.scheduler` — the unified Scheduler/Plan API,
 * :mod:`repro.core.workflows` — workflow-instance generators,
 * :mod:`repro.core.modelgraph` — model architectures as workflow DAGs,
 * :mod:`repro.core.autoshard` — placement planning for the JAX runtime.
+
+Scheduling API
+--------------
+:class:`~repro.core.scheduler.Scheduler` is the entry point for all
+mapping runs.  It executes registered pipeline *stages*; the paper's
+steps map to stage names as follows:
+
+========  ============  ===============================================
+paper     stage name    role
+========  ============  ===============================================
+Step 1    partition     acyclic k'-way partition (dagP role)
+Step 2    assign        BiggestAssign/FitBlock (Algorithms 1–2)
+Step 3    merge         MergeUnassignedToAssigned (Algorithms 3–4)
+Step 4    swap          best-improvement block swaps (Algorithm 5)
+Step 4    idle_moves    critical-path moves to faster idle processors
+§4.1      pack          DagHetMem min-peak traversal packing
+========  ============  ===============================================
+
+``schedule(wf, platform, kprime=[1, 4, 9], workers=4)`` sweeps the k'
+values (in parallel for ``workers > 1``, bit-identical best makespans)
+and always returns a :class:`~repro.core.scheduler.ScheduleReport`:
+the best :class:`MappingResult` *or* a structured
+:class:`~repro.core.scheduler.Infeasibility`, plus per-stage timings
+and the full k'→makespan sweep trace (``to_json``/``from_json`` for
+benchmark artifacts).  The legacy :func:`dag_het_part` /
+:func:`dag_het_mem` entry points are deprecated thin wrappers over it.
 """
 from .dag import QuotientGraph, Workflow, build_quotient
 from .platform import (
@@ -41,7 +68,17 @@ from .memdag import (
 )
 from .partitioner import acyclic_partition, edge_cut, partition_block
 from .baseline import MappingResult, dag_het_mem, validate_mapping
-from .heuristic import dag_het_part
+from .heuristic import dag_het_part, kprime_sweep_values
+from .scheduler import (
+    Infeasibility,
+    MappingSummary,
+    ScheduleReport,
+    Scheduler,
+    SchedulerConfig,
+    Stage,
+    SweepPoint,
+    schedule,
+)
 from .workflows import (
     FAMILIES,
     generate_workflow,
@@ -61,6 +98,9 @@ __all__ = [
     "simulate_peak", "simulate_peak_members",
     "acyclic_partition", "edge_cut", "partition_block",
     "MappingResult", "dag_het_mem", "dag_het_part", "validate_mapping",
+    "Scheduler", "SchedulerConfig", "ScheduleReport", "SweepPoint",
+    "Infeasibility", "MappingSummary", "Stage", "schedule",
+    "kprime_sweep_values",
     "FAMILIES", "generate_workflow", "real_like_workflows",
     "random_layered_dag",
 ]

@@ -23,12 +23,12 @@ from dataclasses import dataclass, field
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
-from .baseline import MappingResult, dag_het_mem, validate_mapping
+from .baseline import MappingResult, validate_mapping
 from .dag import Workflow
-from .heuristic import dag_het_part
 from .makespan import critical_path
 from .modelgraph import TaskInfo, build_model_graph
 from .platform import Platform
+from .scheduler import ScheduleReport, Scheduler, SchedulerConfig
 
 __all__ = ["PartitionPlan", "plan"]
 
@@ -52,28 +52,32 @@ class PartitionPlan:
     mapping: MappingResult = field(repr=False, default=None)
     workflow: Workflow = field(repr=False, default=None)
     info: dict = field(repr=False, default=None)
+    report: ScheduleReport = field(repr=False, default=None)
 
 
 def plan(cfg: ModelConfig, shape: ShapeConfig, platform: Platform,
-         *, algo: str = "dag_het_part", kprime="auto",
+         *, algo: str = "dag_het_part", kprime="auto", workers: int = 1,
          microbatches: int | None = None) -> PartitionPlan | None:
     """Compute a placement plan; None if the fleet can't hold the model.
 
-    ``microbatches`` defaults to 8 for training shapes (pipelined
-    working set) and 1 otherwise.
+    Scheduling goes through :class:`repro.core.scheduler.Scheduler`;
+    the full :class:`ScheduleReport` (sweep trace, stage timings, or
+    the infeasibility diagnosis) rides on ``PartitionPlan.report``, and
+    ``workers > 1`` parallelizes the k' sweep.  ``microbatches``
+    defaults to 8 for training shapes (pipelined working set) and 1
+    otherwise.
     """
     if microbatches is None:
         microbatches = 8 if shape.kind == "train" else 1
     wf, info = build_model_graph(cfg, shape, microbatches=microbatches)
-    if algo == "dag_het_part":
-        result = dag_het_part(wf, platform, kprime=kprime)
-    elif algo == "dag_het_mem":
-        result = dag_het_mem(wf, platform)
-    else:
-        raise ValueError(f"unknown algo {algo!r}")
-    if result is None:
+    report = Scheduler(SchedulerConfig(
+        algorithm=algo, kprime=kprime, workers=workers,
+    )).schedule(wf, platform)
+    if not report.feasible:
         return None
-    return _distill(cfg, shape, result, wf, info, platform, algo)
+    p = _distill(cfg, shape, report.best, wf, info, platform, algo)
+    p.report = report
+    return p
 
 
 def _distill(cfg, shape, result, wf, info, platform, algo):

@@ -12,6 +12,7 @@ the four-step heuristic is measured.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 from .dag import QuotientGraph, Workflow, build_quotient
@@ -42,9 +43,37 @@ class MappingResult:
 def dag_het_mem(wf: Workflow, platform: Platform) -> MappingResult | None:
     """Memory-first greedy packing along a min-peak traversal.
 
-    Returns ``None`` when the platform lacks the memory to hold the
-    workflow under this strategy (paper: "the workflow needs a larger
-    platform").
+    .. deprecated::
+        Use :class:`repro.core.scheduler.Scheduler` with
+        ``algorithm="dag_het_mem"`` (or ``schedule(wf, platform,
+        algorithm="dag_het_mem")``), which returns a
+        :class:`~repro.core.scheduler.ScheduleReport` — never ``None``
+        — with stage timings and a structured infeasibility diagnosis.
+        This wrapper keeps the old ``MappingResult | None`` contract by
+        returning ``report.best``.
+    """
+    warnings.warn(
+        "dag_het_mem() is deprecated; use repro.core.scheduler."
+        "Scheduler with algorithm='dag_het_mem' (returns a "
+        "ScheduleReport instead of MappingResult | None)",
+        DeprecationWarning, stacklevel=2,
+    )
+    from .scheduler import schedule
+
+    return schedule(wf, platform, algorithm="dag_het_mem").best
+
+
+def _pack_min_peak(
+    wf: Workflow, platform: Platform
+) -> tuple[MappingResult | None, dict | None]:
+    """The DagHetMem packing itself: ``(result, failure)``.
+
+    Exactly one of the pair is non-``None``.  ``failure`` carries
+    ``{"reason", "gap"}``: ``gap`` is the deficit (requirement minus
+    capacity) of the single task that broke the packing when that task
+    alone cannot fit — ``None`` when the shortfall is aggregate (the
+    platform's total memory ran out) rather than per-block.  The paper's
+    reading of either case: "the workflow needs a larger platform".
     """
     t0 = time.perf_counter()
     if wf.n == 0:
@@ -97,18 +126,32 @@ def dag_het_mem(wf: Workflow, platform: Platform) -> MappingResult | None:
             cur_block += 1
             cur_count = 0
         cur_proc_idx += 1
+        single = (wf.persistent[u] + wf.mem[u] + wf.in_cost(u)
+                  + wf.out_cost(u))
         if cur_proc_idx >= platform.k:
-            return None  # not enough memory in the platform
+            # not enough memory in the platform
+            gap = single - platform.max_memory()
+            return None, {
+                "reason": (
+                    f"all {platform.k} processors exhausted with "
+                    f"{wf.n - i} of {wf.n} tasks unpacked"
+                ),
+                "gap": gap if gap > 0 else None,
+            }
         cap = platform.memory(proc_order[cur_proc_idx])
         live = {}
         live_total = 0.0
         block_peak = 0.0
         persist = 0.0
         # Guard: task alone exceeding every remaining (smaller) memory
-        single = (wf.persistent[u] + wf.mem[u] + wf.in_cost(u)
-                  + wf.out_cost(u))
         if single > cap:
-            return None
+            return None, {
+                "reason": (
+                    f"task {u} needs {single:.4g} alone, more than any "
+                    f"remaining processor memory ({cap:.4g})"
+                ),
+                "gap": single - cap,
+            }
     blocks_procs.append(proc_order[cur_proc_idx])
 
     q = build_quotient(wf, block_of)
@@ -139,7 +182,7 @@ def dag_het_mem(wf: Workflow, platform: Platform) -> MappingResult | None:
         runtime_s=time.perf_counter() - t0,
         k_used=len(blocks_procs),
         extras={"orders": orders},
-    )
+    ), None
 
 
 def validate_mapping(

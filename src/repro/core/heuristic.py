@@ -11,6 +11,17 @@ Step 4  Swaps: best-improvement block swaps + moves of critical-path
 
 The driver sweeps k' ≤ k and keeps the best makespan (paper Step 1).
 
+Migration note
+--------------
+The pipeline itself now lives in :mod:`repro.core.scheduler`: Steps 1–4
+are registered, composable pipeline stages (``"partition"``,
+``"assign"``, ``"merge"``, ``"swap"``, ``"idle_moves"``) driven by a
+:class:`~repro.core.scheduler.Scheduler`, which also parallelizes the
+k' sweep and returns structured :class:`ScheduleReport`\\ s.  This
+module keeps the step *implementations* plus a deprecated
+:func:`dag_het_part` wrapper for the old ``MappingResult | None``
+contract.
+
 Scaling design (30k-task instances)
 -----------------------------------
 Candidate evaluation no longer re-sweeps Γ: Steps 3–4 share one
@@ -31,15 +42,15 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import time
+import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass
 
 from .baseline import MappingResult
-from .dag import QuotientGraph, Workflow, build_quotient
+from .dag import QuotientGraph, Workflow
 from .incremental import IncrementalEvaluator
 from .memdag import block_requirement_witness, simulate_peak_members
-from .partitioner import acyclic_partition, partition_block
+from .partitioner import partition_block
 from .platform import Platform
 
 __all__ = ["dag_het_part", "kprime_sweep_values"]
@@ -408,8 +419,13 @@ def _merge_unassigned(
     q: QuotientGraph,
     reqs: _Requirements,
     ev: IncrementalEvaluator,
-) -> bool:
-    """Algorithm 4.  Mutates ``q``; False when some block can't be placed.
+) -> dict | None:
+    """Algorithm 4.  Mutates ``q``; ``None`` on success, else a failure
+    record ``{"reason", "gap", "block_size"}`` describing the block that
+    could not be merged or placed (``gap`` is its requirement minus the
+    largest processor memory — positive means no processor could ever
+    hold it, non-positive means the capacity exists but every feasible
+    merge/idle placement was exhausted).
 
     Beyond-paper refinement (DESIGN.md §8): when no merge is feasible,
     try placing the block on a memory-feasible *idle* processor before
@@ -493,8 +509,19 @@ def _merge_unassigned(
                 seen_count[v] = seen_count.get(v, 0) + 1
                 queue.append(v)
             else:
-                return False  # no solution for this k'
-    return True
+                # no solution for this k'
+                r_v = reqs.of(q, v)
+                size = len(q.members[v])
+                return {
+                    "reason": (
+                        f"block of {size} task(s) with requirement "
+                        f"{r_v:.4g} has no feasible merge or idle "
+                        f"placement"
+                    ),
+                    "gap": r_v - platform.max_memory(),
+                    "block_size": size,
+                }
+    return None
 
 
 # ---------------------------------------------------------------------- #
@@ -660,16 +687,23 @@ def _idle_moves(
 def kprime_sweep_values(wf: Workflow, platform: Platform,
                         mode: str = "auto") -> list[int]:
     """Which k' values to try (paper: all of 1..k; we default to a
-    geometric subset for very large workflows — a documented knob)."""
+    geometric subset for very large workflows — a documented knob).
+
+    The subset always contains 1, 2, 3, ``max(1, k // 2)`` and ``k``:
+    half the platform is the sweep's empirically strongest anchor on
+    wide workflows, and the geometric ladder can otherwise step over
+    it.  Values are deduplicated before sorting, so small ``k`` (where
+    the anchors collide) yields each candidate exactly once.
+    """
     k = platform.k
     if mode == "full" or (mode == "auto" and wf.n <= 4000):
         return list(range(1, k + 1))
-    vals = {1, 2, 3, k}
+    vals = [1, 2, 3, max(1, k // 2), k]
     v = 4
     while v < k:
-        vals.add(v)
+        vals.append(v)
         v = int(v * 1.6) + 1
-    return sorted(x for x in vals if 1 <= x <= k)
+    return sorted({x for x in vals if 1 <= x <= k})
 
 
 def dag_het_part(
@@ -682,86 +716,24 @@ def dag_het_part(
 ) -> MappingResult | None:
     """Run the four-step heuristic, sweeping k' and keeping the best.
 
-    ``exact_limit`` bounds the exact min-peak DP used inside block
-    requirement computation (0 ⇒ heuristic traversal only, matching the
-    scale of the paper's experiments).
+    .. deprecated::
+        Use :class:`repro.core.scheduler.Scheduler` (or the
+        :func:`repro.core.scheduler.schedule` shorthand), which returns
+        a :class:`~repro.core.scheduler.ScheduleReport` — never ``None``
+        — with the k'→makespan sweep trace, per-stage timings and a
+        structured infeasibility diagnosis, and can run the k' sweep on
+        a process pool (``workers>1``).  This wrapper keeps the old
+        ``MappingResult | None`` contract by returning ``report.best``.
     """
-    t0 = time.perf_counter()
-    if isinstance(kprime, list):
-        sweep = kprime
-    else:
-        sweep = kprime_sweep_values(wf, platform, kprime)
-
-    best: MappingResult | None = None
-    memo: dict = {}  # content-keyed Step-2 requirement/split reuse
-    for kp in sweep:
-        res = _run_single(wf, platform, kp, exact_limit, memo)
-        if res is None:
-            continue
-        if best is None or res.makespan < best.makespan:
-            best = res
-        if verbose:
-            print(f"  k'={kp}: makespan={res.makespan:.2f}")
-    if best is not None:
-        best.runtime_s = time.perf_counter() - t0
-    return best
-
-
-def _run_single(
-    wf: Workflow,
-    platform: Platform,
-    kp: int,
-    exact_limit: int,
-    memo: dict | None = None,
-) -> MappingResult | None:
-    # ---- Step 1: initial acyclic partition -------------------------- #
-    assignment = acyclic_partition(wf, kp)
-    groups: dict[int, list[int]] = {}
-    for u, b in enumerate(assignment):
-        groups.setdefault(b, []).append(u)
-    blocks = [groups[b] for b in sorted(groups)]
-
-    # ---- Step 2: biggest-first assignment --------------------------- #
-    step2 = _biggest_assign(wf, platform, blocks, exact_limit, memo)
-    if not step2.assigned:
-        return None
-
-    # ---- Step 3: merge unassigned into assigned --------------------- #
-    block_of: list[int] = [-1] * wf.n
-    bid = 0
-    proc_of_bid: dict[int, int] = {}
-    for nodes, pj in step2.assigned:
-        for u in nodes:
-            block_of[u] = bid
-        proc_of_bid[bid] = pj
-        bid += 1
-    for nodes in step2.unassigned:
-        for u in nodes:
-            block_of[u] = bid
-        bid += 1
-    q = build_quotient(wf, block_of)
-    for vid, members in q.members.items():
-        b = block_of[next(iter(members))]
-        q.proc[vid] = proc_of_bid.get(b)
-
-    reqs = _Requirements(wf, exact_limit, sweep_memo=memo)
-    ev = IncrementalEvaluator(q, platform)
-    if not _merge_unassigned(wf, platform, q, reqs, ev):
-        return None
-
-    # ---- Step 4: swaps + idle moves ---------------------------------- #
-    _swap_pass(wf, platform, q, reqs, ev)
-    _idle_moves(wf, platform, q, reqs, ev)
-
-    ms = ev.makespan()
-    return MappingResult(
-        algo="DagHetPart",
-        quotient=q,
-        platform=platform,
-        makespan=ms,
-        runtime_s=0.0,
-        k_used=q.n_vertices,
-        # witness traversals double as feasibility certificates for
-        # composed (bound-priced) blocks during validation
-        extras={"k_prime": kp, "orders": reqs.witness_orders(q)},
+    warnings.warn(
+        "dag_het_part() is deprecated; use repro.core.scheduler."
+        "Scheduler (returns a ScheduleReport instead of "
+        "MappingResult | None)",
+        DeprecationWarning, stacklevel=2,
     )
+    from .scheduler import schedule
+
+    report = schedule(wf, platform, algorithm="dag_het_part",
+                      kprime=kprime, exact_limit=exact_limit,
+                      verbose=verbose)
+    return report.best

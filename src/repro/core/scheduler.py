@@ -1,0 +1,794 @@
+"""Unified Scheduler/Plan API: the paper's heuristics as a pipeline.
+
+The four-step heuristic (paper §4.2) and the DagHetMem baseline (§4.1)
+are *pipelines* of stages, not opaque functions.  This module makes
+that structure first-class:
+
+* :class:`Stage` — protocol for one pipeline step; implementations are
+  registered by name (:func:`register_stage`) and composed into
+  algorithm pipelines (:data:`PIPELINES`, :func:`register_pipeline`),
+* :class:`SchedulerConfig` — algorithm, k'-sweep policy, exact-DP
+  limit, per-step toggles, time budget, worker count and the
+  ``on_sweep_result`` reporting callback,
+* :class:`Scheduler` — the facade: ``Scheduler(config).schedule(wf,
+  platform)`` runs the k' sweep (serially or on a
+  ``concurrent.futures`` process pool with per-worker Step-2 memos)
+  and **always** returns a :class:`ScheduleReport` — never ``None``,
+* :class:`ScheduleReport` — the best :class:`MappingResult` *or* a
+  structured :class:`Infeasibility` (which stage failed, tightest
+  memory gap, smallest k' attempted), plus per-stage timings, the full
+  k'→makespan sweep trace and ``to_json()``/``from_json()`` for
+  benchmark artifacts.
+
+Paper-step ↔ stage-name map::
+
+    Step 1  partition    acyclic k'-way partition (dagP role)
+    Step 2  assign       BiggestAssign/FitBlock (Algorithms 1–2)
+    Step 3  merge        MergeUnassignedToAssigned (Algorithms 3–4)
+    Step 4  swap         best-improvement block swaps (Algorithm 5)
+    Step 4  idle_moves   critical-path moves to faster idle processors
+    §4.1    pack         DagHetMem min-peak traversal packing
+
+Determinism: every stage is deterministic, and the sweep reduction
+scans results in sweep order with a strict ``<``, so ``workers=N`` and
+``workers=1`` pick bit-identical best makespans (the per-worker memos
+only cache deterministic pure functions).
+"""
+from __future__ import annotations
+
+import json
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field, replace
+from typing import Callable, Protocol, Sequence, runtime_checkable
+
+from .baseline import MappingResult, _pack_min_peak
+from .dag import Workflow, build_quotient
+from .heuristic import (
+    _Requirements,
+    _biggest_assign,
+    _idle_moves,
+    _memo_witness,
+    _merge_unassigned,
+    _swap_pass,
+    kprime_sweep_values,
+)
+from .incremental import IncrementalEvaluator
+from .partitioner import acyclic_partition
+from .platform import Platform
+
+__all__ = [
+    "Infeasibility",
+    "MappingSummary",
+    "PIPELINES",
+    "ScheduleReport",
+    "Scheduler",
+    "SchedulerConfig",
+    "Stage",
+    "StageContext",
+    "SweepPoint",
+    "available_stages",
+    "get_stage",
+    "kprime_sweep_values",
+    "register_pipeline",
+    "register_stage",
+    "schedule",
+]
+
+
+# ---------------------------------------------------------------------- #
+# report dataclasses
+# ---------------------------------------------------------------------- #
+@dataclass
+class SweepPoint:
+    """One k' attempt of the sweep (k' is ``None`` for sweep-free
+    pipelines such as the baseline's single packing run)."""
+
+    k_prime: int | None
+    makespan: float | None
+    feasible: bool
+    time_s: float
+    stage_times: dict[str, float] = field(default_factory=dict)
+    failed_stage: str | None = None
+    fail_reason: str | None = None
+    memory_gap: float | None = None
+
+    def to_dict(self) -> dict:
+        return {
+            "k_prime": self.k_prime,
+            "makespan": self.makespan,
+            "feasible": self.feasible,
+            "time_s": self.time_s,
+            "stage_times": dict(self.stage_times),
+            "failed_stage": self.failed_stage,
+            "fail_reason": self.fail_reason,
+            "memory_gap": self.memory_gap,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SweepPoint":
+        return cls(**d)
+
+
+@dataclass
+class Infeasibility:
+    """Structured diagnosis of an infeasible run.
+
+    ``stage`` is the failure of the sweep attempt that got furthest
+    through the pipeline; ``tightest_gap`` is the smallest positive
+    requirement-minus-capacity deficit observed across the whole sweep
+    (how much more memory would have been needed, ``None`` when every
+    failure was structural rather than a raw capacity shortfall);
+    ``smallest_kprime`` is the smallest k' attempted.
+    """
+
+    algorithm: str
+    stage: str
+    reason: str
+    tightest_gap: float | None
+    smallest_kprime: int | None
+    attempts: int
+
+    def to_dict(self) -> dict:
+        return {
+            "algorithm": self.algorithm,
+            "stage": self.stage,
+            "reason": self.reason,
+            "tightest_gap": self.tightest_gap,
+            "smallest_kprime": self.smallest_kprime,
+            "attempts": self.attempts,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Infeasibility":
+        return cls(**d)
+
+
+@dataclass
+class MappingSummary:
+    """JSON-friendly projection of a :class:`MappingResult` (the live
+    quotient graph / platform objects stay on ``ScheduleReport.best``)."""
+
+    algo: str
+    makespan: float
+    k_used: int
+    k_prime: int | None
+    runtime_s: float
+    block_of_task: list[int]
+    proc_of_block: dict[int, int]
+
+    @classmethod
+    def from_result(cls, res: MappingResult) -> "MappingSummary":
+        return cls(
+            algo=res.algo,
+            makespan=float(res.makespan),
+            k_used=int(res.k_used),
+            k_prime=res.extras.get("k_prime"),
+            runtime_s=float(res.runtime_s),
+            block_of_task=[int(b) for b in res.block_of_task()],
+            proc_of_block={int(v): int(p)
+                           for v, p in sorted(res.quotient.proc.items())},
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "algo": self.algo,
+            "makespan": self.makespan,
+            "k_used": self.k_used,
+            "k_prime": self.k_prime,
+            "runtime_s": self.runtime_s,
+            "block_of_task": list(self.block_of_task),
+            # JSON objects key by string; keep explicit pairs instead
+            "proc_of_block": [[v, p]
+                              for v, p in sorted(self.proc_of_block.items())],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MappingSummary":
+        d = dict(d)
+        d["proc_of_block"] = {int(v): int(p) for v, p in d["proc_of_block"]}
+        return cls(**d)
+
+
+@dataclass
+class ScheduleReport:
+    """What a :class:`Scheduler` run returns — never ``None``.
+
+    Exactly one of ``summary`` / ``infeasibility`` is set.  ``best``
+    carries the live :class:`MappingResult` on feasible runs; it is
+    deliberately excluded from JSON and equality (``from_json`` yields
+    a report with ``best=None`` but an otherwise identical record).
+    """
+
+    algorithm: str
+    summary: MappingSummary | None
+    infeasibility: Infeasibility | None
+    sweep: list[SweepPoint]
+    stage_times: dict[str, float]
+    total_time_s: float
+    workers: int
+    truncated: bool = False
+    best: MappingResult | None = field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def feasible(self) -> bool:
+        return self.summary is not None
+
+    @property
+    def makespan(self) -> float | None:
+        return self.summary.makespan if self.summary else None
+
+    def to_dict(self) -> dict:
+        return {
+            "algorithm": self.algorithm,
+            "summary": self.summary.to_dict() if self.summary else None,
+            "infeasibility": (self.infeasibility.to_dict()
+                              if self.infeasibility else None),
+            "sweep": [p.to_dict() for p in self.sweep],
+            "stage_times": dict(self.stage_times),
+            "total_time_s": self.total_time_s,
+            "workers": self.workers,
+            "truncated": self.truncated,
+        }
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScheduleReport":
+        return cls(
+            algorithm=d["algorithm"],
+            summary=(MappingSummary.from_dict(d["summary"])
+                     if d.get("summary") else None),
+            infeasibility=(Infeasibility.from_dict(d["infeasibility"])
+                           if d.get("infeasibility") else None),
+            sweep=[SweepPoint.from_dict(p) for p in d.get("sweep", [])],
+            stage_times=dict(d.get("stage_times", {})),
+            total_time_s=d["total_time_s"],
+            workers=d.get("workers", 1),
+            truncated=d.get("truncated", False),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "ScheduleReport":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------- #
+# stages
+# ---------------------------------------------------------------------- #
+@dataclass
+class StageFailure:
+    """Why a stage declared its k' attempt infeasible."""
+
+    stage: str
+    reason: str
+    gap: float | None  # requirement − capacity deficit where computable
+
+
+@dataclass
+class StageContext:
+    """Mutable state threaded through one pipeline run (one k')."""
+
+    wf: Workflow
+    platform: Platform
+    k_prime: int | None
+    exact_limit: int
+    memo: dict                      # Step-2 requirement/split memo
+    blocks: list[list[int]] | None = None   # Step-1 output
+    q: object | None = None                 # quotient graph (post Step 2)
+    reqs: _Requirements | None = None
+    ev: IncrementalEvaluator | None = None
+    result: MappingResult | None = None
+    failure: StageFailure | None = None
+
+
+@runtime_checkable
+class Stage(Protocol):
+    """One pipeline step: mutate ``ctx``; set ``ctx.failure`` to abort
+    the run (structured, never an exception for infeasibility).
+
+    ``toggle`` optionally names the :class:`SchedulerConfig` boolean
+    that enables the stage (``None`` ⇒ always on).
+    """
+
+    name: str
+    toggle: str | None
+
+    def run(self, ctx: StageContext) -> None: ...
+
+
+class PartitionStage:
+    """Step 1: initial acyclic k'-way partition (edge-cut optimizer)."""
+
+    name = "partition"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        assignment = acyclic_partition(ctx.wf, ctx.k_prime)
+        groups: dict[int, list[int]] = {}
+        for u, b in enumerate(assignment):
+            groups.setdefault(b, []).append(u)
+        ctx.blocks = [groups[b] for b in sorted(groups)]
+
+
+class AssignStage:
+    """Step 2: BiggestAssign/FitBlock, then lift the result into a
+    quotient graph + requirements cache + incremental evaluator."""
+
+    name = "assign"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        wf, platform = ctx.wf, ctx.platform
+        step2 = _biggest_assign(wf, platform, ctx.blocks,
+                                ctx.exact_limit, ctx.memo)
+        if not step2.assigned:
+            # every block ended stuck: singletons exceeding even the
+            # largest memory — report the tightest deficit
+            gaps = [
+                _memo_witness(wf, nodes, ctx.exact_limit, ctx.memo)[0]
+                - platform.max_memory()
+                for nodes in step2.unassigned
+            ]
+            ctx.failure = StageFailure(
+                self.name,
+                f"no block fits any processor at k'={ctx.k_prime}",
+                min(gaps) if gaps else None,
+            )
+            return
+        block_of: list[int] = [-1] * wf.n
+        bid = 0
+        proc_of_bid: dict[int, int] = {}
+        for nodes, pj in step2.assigned:
+            for u in nodes:
+                block_of[u] = bid
+            proc_of_bid[bid] = pj
+            bid += 1
+        for nodes in step2.unassigned:
+            for u in nodes:
+                block_of[u] = bid
+            bid += 1
+        q = build_quotient(wf, block_of)
+        for vid, members in q.members.items():
+            b = block_of[next(iter(members))]
+            q.proc[vid] = proc_of_bid.get(b)
+        ctx.q = q
+        ctx.reqs = _Requirements(wf, ctx.exact_limit, sweep_memo=ctx.memo)
+        ctx.ev = IncrementalEvaluator(q, platform)
+
+
+class MergeStage:
+    """Step 3: merge unassigned blocks into assigned ones."""
+
+    name = "merge"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        fail = _merge_unassigned(ctx.wf, ctx.platform, ctx.q,
+                                 ctx.reqs, ctx.ev)
+        if fail is not None:
+            ctx.failure = StageFailure(
+                self.name,
+                f"{fail['reason']} at k'={ctx.k_prime}",
+                fail["gap"],
+            )
+
+
+class SwapStage:
+    """Step 4a: best-improvement block swaps."""
+
+    name = "swap"
+    toggle = "swap"
+
+    def run(self, ctx: StageContext) -> None:
+        _swap_pass(ctx.wf, ctx.platform, ctx.q, ctx.reqs, ctx.ev)
+
+
+class IdleMoveStage:
+    """Step 4b: move critical-path blocks to faster idle processors."""
+
+    name = "idle_moves"
+    toggle = "idle_moves"
+
+    def run(self, ctx: StageContext) -> None:
+        _idle_moves(ctx.wf, ctx.platform, ctx.q, ctx.reqs, ctx.ev)
+
+
+class PackStage:
+    """DagHetMem (§4.1): min-peak traversal packed memory-first."""
+
+    name = "pack"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        res, fail = _pack_min_peak(ctx.wf, ctx.platform)
+        if res is None:
+            ctx.failure = StageFailure(self.name, fail["reason"],
+                                       fail["gap"])
+        else:
+            ctx.result = res
+
+
+_STAGES: dict[str, Stage] = {}
+
+#: algorithm name -> pipeline (tuple of registered stage names)
+PIPELINES: dict[str, tuple[str, ...]] = {}
+
+
+def register_stage(stage: Stage, *, replace_existing: bool = False) -> None:
+    """Register ``stage`` under ``stage.name`` for use in pipelines."""
+    if stage.name in _STAGES and not replace_existing:
+        raise ValueError(f"stage {stage.name!r} already registered")
+    _STAGES[stage.name] = stage
+
+
+def get_stage(name: str) -> Stage:
+    try:
+        return _STAGES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown stage {name!r}; registered: {available_stages()}"
+        ) from None
+
+
+def available_stages() -> list[str]:
+    return sorted(_STAGES)
+
+
+def register_pipeline(algorithm: str, stage_names: Sequence[str]) -> None:
+    """Register (or override) an algorithm as a stage pipeline."""
+    for n in stage_names:
+        get_stage(n)  # fail fast on unknown stages
+    PIPELINES[algorithm] = tuple(stage_names)
+
+
+for _stage in (PartitionStage(), AssignStage(), MergeStage(),
+               SwapStage(), IdleMoveStage(), PackStage()):
+    register_stage(_stage)
+register_pipeline("dag_het_part",
+                  ("partition", "assign", "merge", "swap", "idle_moves"))
+register_pipeline("dag_het_mem", ("pack",))
+
+
+# ---------------------------------------------------------------------- #
+# configuration
+# ---------------------------------------------------------------------- #
+@dataclass
+class SchedulerConfig:
+    """Everything a :class:`Scheduler` run is driven by.
+
+    ``kprime`` is a sweep policy name (``"auto"`` / ``"full"``, see
+    :func:`kprime_sweep_values`) or an explicit list of k' values.
+    ``swap`` / ``idle_moves`` toggle the Step-4 refinement stages.
+    ``time_budget_s`` soft-bounds the sweep: at least one k' always
+    completes, later ones are skipped (serial) or cancelled (parallel)
+    once the budget is exceeded, and the report is marked
+    ``truncated``.  ``workers > 1`` runs independent k' values on a
+    process pool with per-worker Step-2 memos — best makespans are
+    bit-identical to serial.  ``on_sweep_result`` receives every
+    :class:`SweepPoint` in sweep order, in the parent process, in both
+    execution modes — ``verbose`` merely installs a default printer on
+    the same channel.  ``stages`` overrides the algorithm's registered
+    pipeline with an explicit stage-name sequence.
+    """
+
+    algorithm: str = "dag_het_part"
+    kprime: str | Sequence[int] = "auto"
+    exact_limit: int = 0
+    swap: bool = True
+    idle_moves: bool = True
+    time_budget_s: float | None = None
+    workers: int = 1
+    verbose: bool = False
+    on_sweep_result: Callable[[SweepPoint], None] | None = None
+    stages: Sequence[str] | None = None
+
+
+@dataclass(frozen=True)
+class _RunSpec:
+    """The picklable subset of the config a worker needs."""
+
+    stage_names: tuple[str, ...]
+    exact_limit: int
+
+
+# ---------------------------------------------------------------------- #
+# pipeline execution (shared by the serial path and pool workers)
+# ---------------------------------------------------------------------- #
+def _execute_pipeline(
+    wf: Workflow,
+    platform: Platform,
+    spec: _RunSpec,
+    kp: int | None,
+    memo: dict,
+) -> tuple[MappingResult | None, SweepPoint]:
+    t_run = time.perf_counter()
+    ctx = StageContext(wf=wf, platform=platform, k_prime=kp,
+                       exact_limit=spec.exact_limit, memo=memo)
+    stage_times: dict[str, float] = {}
+    for name in spec.stage_names:
+        stage = get_stage(name)
+        t0 = time.perf_counter()
+        stage.run(ctx)
+        stage_times[name] = (stage_times.get(name, 0.0)
+                             + time.perf_counter() - t0)
+        if ctx.failure is not None:
+            break
+    if ctx.failure is None and ctx.result is None:
+        # heuristic pipelines leave the mapping in the evaluator state
+        ms = ctx.ev.makespan()
+        ctx.result = MappingResult(
+            algo="DagHetPart",
+            quotient=ctx.q,
+            platform=platform,
+            makespan=ms,
+            runtime_s=0.0,
+            k_used=ctx.q.n_vertices,
+            # witness traversals double as feasibility certificates for
+            # composed (bound-priced) blocks during validation
+            extras={"k_prime": kp,
+                    "orders": ctx.reqs.witness_orders(ctx.q)},
+        )
+    dt = time.perf_counter() - t_run
+    if ctx.result is not None:
+        ctx.result.runtime_s = dt
+        point = SweepPoint(k_prime=kp, makespan=float(ctx.result.makespan),
+                           feasible=True, time_s=dt,
+                           stage_times=stage_times)
+    else:
+        point = SweepPoint(k_prime=kp, makespan=None, feasible=False,
+                           time_s=dt, stage_times=stage_times,
+                           failed_stage=ctx.failure.stage,
+                           fail_reason=ctx.failure.reason,
+                           memory_gap=ctx.failure.gap)
+    return ctx.result, point
+
+
+# Pool workers hold the (wf, platform, spec) triple plus a *per-worker*
+# Step-2 memo that persists across the k' tasks they serve — the
+# parallel analogue of the serial path's single sweep-shared memo
+# (ROADMAP perf follow-on #1).  Memo contents only cache deterministic
+# pure functions, so sharing topology never changes results.
+#
+# On fork-capable platforms the triple is published to workers through
+# inherited memory (set in the parent immediately before the fork):
+# pickling a 10⁴-task adjacency into every worker via ``initargs``
+# costs more than several whole sweep points.  Forking with JAX loaded
+# in the parent draws a RuntimeWarning; it is safe *here* because
+# workers execute only this pure-Python scheduling code and never call
+# into JAX (or any other threaded runtime) before exiting.
+_WORKER_STATE: dict = {}
+
+
+def _pool_init(wf: Workflow, platform: Platform, spec: _RunSpec) -> None:
+    _WORKER_STATE["wf"] = wf
+    _WORKER_STATE["platform"] = platform
+    _WORKER_STATE["spec"] = spec
+    _WORKER_STATE["memo"] = {}
+
+
+def _make_pool(wf: Workflow, platform: Platform, spec: _RunSpec,
+               max_workers: int) -> ProcessPoolExecutor:
+    import multiprocessing as mp
+
+    try:
+        ctx = mp.get_context("fork")
+    except ValueError:  # platform without fork (e.g. Windows)
+        ctx = None
+    if ctx is None:
+        return ProcessPoolExecutor(
+            max_workers=max_workers,
+            initializer=_pool_init, initargs=(wf, platform, spec))
+    # fork path: children inherit _WORKER_STATE as set right now; the
+    # memo dict is fresh, and each child's copy is independent (CoW).
+    # (Pre-warming the memo in the parent was measured and rejected:
+    # CPython refcount writes force copy-on-write of the inherited
+    # pages, costing more than the workers' cold recomputation.)
+    _pool_init(wf, platform, spec)
+    return ProcessPoolExecutor(max_workers=max_workers, mp_context=ctx)
+
+
+def _pool_run(kp: int | None) -> tuple[MappingResult | None, SweepPoint]:
+    res, point = _execute_pipeline(
+        _WORKER_STATE["wf"], _WORKER_STATE["platform"],
+        _WORKER_STATE["spec"], kp, _WORKER_STATE["memo"])
+    if res is not None:
+        # Detach the workflow before the result crosses the process
+        # boundary: the parent re-attaches its own (identical) copy.
+        # Pickling the full adjacency once per sweep point would
+        # otherwise dominate the parallel path's wall clock.
+        res.quotient.wf = None
+    return res, point
+
+
+# ---------------------------------------------------------------------- #
+# the facade
+# ---------------------------------------------------------------------- #
+def _default_printer(point: SweepPoint) -> None:
+    label = f"k'={point.k_prime}" if point.k_prime is not None else "run"
+    if point.feasible:
+        print(f"  {label}: makespan={point.makespan:.2f}")
+    else:
+        print(f"  {label}: infeasible "
+              f"({point.failed_stage}: {point.fail_reason})")
+
+
+class Scheduler:
+    """Facade over the stage pipelines and the k' sweep.
+
+    >>> report = Scheduler(SchedulerConfig(kprime=[1, 4, 9])).schedule(
+    ...     wf, platform)                                # doctest: +SKIP
+    >>> report.feasible, report.makespan                 # doctest: +SKIP
+
+    Construction accepts a full :class:`SchedulerConfig`, keyword
+    overrides on top of it, or keywords alone.
+    """
+
+    def __init__(self, config: SchedulerConfig | None = None,
+                 **overrides) -> None:
+        cfg = config if config is not None else SchedulerConfig()
+        if overrides:
+            cfg = replace(cfg, **overrides)
+        self.config = cfg
+
+    # -------------------------------------------------------------- #
+    def stage_names(self) -> tuple[str, ...]:
+        """The resolved, toggle-filtered pipeline for this config."""
+        cfg = self.config
+        if cfg.stages is not None:
+            names: Sequence[str] = tuple(cfg.stages)
+        else:
+            try:
+                names = PIPELINES[cfg.algorithm]
+            except KeyError:
+                raise ValueError(
+                    f"unknown algorithm {cfg.algorithm!r}; registered "
+                    f"pipelines: {sorted(PIPELINES)}"
+                ) from None
+        out = []
+        for n in names:
+            stage = get_stage(n)
+            toggle = getattr(stage, "toggle", None)
+            if toggle is not None and not getattr(cfg, toggle):
+                continue
+            out.append(n)
+        return tuple(out)
+
+    def sweep_values(self, wf: Workflow,
+                     platform: Platform) -> list[int | None]:
+        """The k' values this run will attempt (``[None]`` for
+        pipelines without a partition stage — nothing to sweep)."""
+        if "partition" not in self.stage_names():
+            return [None]
+        kprime = self.config.kprime
+        if isinstance(kprime, str):
+            return list(kprime_sweep_values(wf, platform, kprime))
+        vals = [int(x) for x in kprime]
+        if not vals:
+            raise ValueError("empty k' sweep")
+        return vals
+
+    # -------------------------------------------------------------- #
+    def schedule(self, wf: Workflow, platform: Platform) -> ScheduleReport:
+        """Run the configured pipeline; always a :class:`ScheduleReport`."""
+        cfg = self.config
+        t0 = time.perf_counter()
+        spec = _RunSpec(self.stage_names(), cfg.exact_limit)
+        sweep = self.sweep_values(wf, platform)
+        callbacks: list[Callable[[SweepPoint], None]] = []
+        if cfg.verbose:
+            callbacks.append(_default_printer)
+        if cfg.on_sweep_result is not None:
+            callbacks.append(cfg.on_sweep_result)
+
+        # Best-result reduction is folded into collection: points are
+        # consumed in sweep order in both modes, and strict < keeps
+        # the earliest-k' winner, so at most two mappings (incumbent +
+        # candidate) are ever alive — the k'-length sweep would
+        # otherwise hold one full mapping per point at 30k tasks.
+        best: MappingResult | None = None
+        points: list[SweepPoint] = []
+        truncated = False
+
+        def reduce_best(res: MappingResult | None) -> None:
+            nonlocal best
+            if res is not None and (best is None
+                                    or res.makespan < best.makespan):
+                best = res
+
+        def over_budget() -> bool:
+            return (cfg.time_budget_s is not None
+                    and time.perf_counter() - t0 > cfg.time_budget_s)
+
+        if cfg.workers > 1 and len(sweep) > 1:
+            pool = _make_pool(wf, platform, spec,
+                              min(cfg.workers, len(sweep)))
+            try:
+                futs = [pool.submit(_pool_run, kp) for kp in sweep]
+                # iterate in sweep order: callbacks and the best-result
+                # reduction stay deterministic regardless of completion
+                # order
+                exhausted = False
+                for fut in futs:
+                    if points and not exhausted and over_budget():
+                        exhausted = True
+                    if exhausted and fut.cancel():
+                        # only not-yet-started work is dropped; results
+                        # already computed (or in flight) are collected
+                        truncated = True
+                        continue
+                    res, point = fut.result()
+                    if res is not None:
+                        res.quotient.wf = wf  # re-attach (see _pool_run)
+                    reduce_best(res)
+                    points.append(point)
+                    for cb in callbacks:
+                        cb(point)
+            finally:
+                pool.shutdown(wait=False, cancel_futures=True)
+                _WORKER_STATE.clear()  # parent copy: drop wf references
+        else:
+            memo: dict = {}  # content-keyed reuse across the serial sweep
+            for kp in sweep:
+                if points and over_budget():
+                    truncated = True
+                    break
+                res, point = _execute_pipeline(wf, platform, spec, kp, memo)
+                reduce_best(res)
+                points.append(point)
+                for cb in callbacks:
+                    cb(point)
+
+        total = time.perf_counter() - t0
+        stage_times: dict[str, float] = {}
+        for p in points:
+            for name, dt in p.stage_times.items():
+                stage_times[name] = stage_times.get(name, 0.0) + dt
+
+        if best is not None:
+            best.runtime_s = total  # whole-sweep time, as dag_het_part did
+            summary = MappingSummary.from_result(best)
+            infeas = None
+        else:
+            summary = None
+            infeas = self._diagnose(spec.stage_names, points)
+        return ScheduleReport(
+            algorithm=cfg.algorithm,
+            summary=summary,
+            infeasibility=infeas,
+            sweep=points,
+            stage_times=stage_times,
+            total_time_s=total,
+            workers=cfg.workers,
+            truncated=truncated,
+            best=best,
+        )
+
+    __call__ = schedule
+
+    # -------------------------------------------------------------- #
+    def _diagnose(self, stage_names: tuple[str, ...],
+                  points: list[SweepPoint]) -> Infeasibility:
+        order = {name: i for i, name in enumerate(stage_names)}
+        furthest = max(points,
+                       key=lambda p: order.get(p.failed_stage, -1))
+        gaps = [p.memory_gap for p in points
+                if p.memory_gap is not None and p.memory_gap > 0]
+        kps = [p.k_prime for p in points if p.k_prime is not None]
+        return Infeasibility(
+            algorithm=self.config.algorithm,
+            stage=furthest.failed_stage or "?",
+            reason=furthest.fail_reason or "no sweep value succeeded",
+            tightest_gap=min(gaps) if gaps else None,
+            smallest_kprime=min(kps) if kps else None,
+            attempts=len(points),
+        )
+
+
+def schedule(wf: Workflow, platform: Platform,
+             config: SchedulerConfig | None = None,
+             **overrides) -> ScheduleReport:
+    """One-call convenience: ``Scheduler(config, **kw).schedule(...)``."""
+    return Scheduler(config, **overrides).schedule(wf, platform)

@@ -1,6 +1,11 @@
 """End-to-end tests of DagHetMem and DagHetPart on paper-style
 instances: validity (memory, acyclicity, injectivity) and the paper's
-qualitative claims (heuristic beats baseline; big fans gain most)."""
+qualitative claims (heuristic beats baseline; big fans gain most).
+
+All runs go through the unified Scheduler API (`repro.core.scheduler`);
+the deprecated `dag_het_part`/`dag_het_mem` wrappers have their own
+coverage in tests/test_scheduler.py.
+"""
 import numpy as np
 import pytest
 try:
@@ -12,13 +17,12 @@ from repro.core import (
     FAMILIES,
     Platform,
     Processor,
-    dag_het_mem,
-    dag_het_part,
     default_cluster,
     generate_workflow,
     no_het_cluster,
     random_layered_dag,
     real_like_workflows,
+    schedule,
     small_cluster,
     validate_mapping,
 )
@@ -26,34 +30,42 @@ from repro.core import (
 SWEEP = [1, 2, 4, 6, 9, 13, 19, 28, 36]
 
 
+def baseline(wf, plat):
+    return schedule(wf, plat, algorithm="dag_het_mem")
+
+
 class TestBaselineValidity:
     @pytest.mark.parametrize("family", FAMILIES)
     def test_valid_mapping_per_family(self, family):
         plat = default_cluster()
         wf = generate_workflow(family, 200, seed=1, platform=plat)
-        res = dag_het_mem(wf, plat)
-        assert res is not None, f"baseline failed on {family}"
-        assert validate_mapping(wf, res) == []
+        rep = baseline(wf, plat)
+        assert rep.feasible, f"baseline failed on {family}"
+        assert validate_mapping(wf, rep.best) == []
 
     def test_fits_single_processor_when_possible(self):
         wf = random_layered_dag(50, seed=0)
         huge = Platform([Processor("big", 1.0, 1e9),
                          Processor("small", 1.0, 1.0)], 1.0)
-        res = dag_het_mem(wf, huge)
-        assert res is not None
-        assert res.k_used == 1
+        rep = baseline(wf, huge)
+        assert rep.feasible
+        assert rep.summary.k_used == 1
 
-    def test_returns_none_when_impossible(self):
+    def test_reports_infeasibility_when_impossible(self):
         wf = random_layered_dag(100, seed=1)
         tiny = Platform([Processor("p", 1.0, 0.5)], 1.0)
-        assert dag_het_mem(wf, tiny) is None
+        rep = baseline(wf, tiny)
+        assert not rep.feasible
+        assert rep.best is None
+        assert rep.infeasibility is not None
+        assert rep.infeasibility.stage == "pack"
 
     def test_real_like_workflows_schedulable(self):
         plat = default_cluster()
         for wf in real_like_workflows():
-            res = dag_het_mem(wf, plat)
-            assert res is not None
-            assert validate_mapping(wf, res) == []
+            rep = baseline(wf, plat)
+            assert rep.feasible
+            assert validate_mapping(wf, rep.best) == []
 
 
 class TestHeuristicValidity:
@@ -61,9 +73,9 @@ class TestHeuristicValidity:
     def test_valid_mapping_per_family(self, family):
         plat = default_cluster()
         wf = generate_workflow(family, 200, seed=1, platform=plat)
-        res = dag_het_part(wf, plat, kprime=SWEEP)
-        assert res is not None, f"heuristic failed on {family}"
-        assert validate_mapping(wf, res) == []
+        rep = schedule(wf, plat, kprime=SWEEP)
+        assert rep.feasible, f"heuristic failed on {family}"
+        assert validate_mapping(wf, rep.best) == []
 
     def test_improves_on_baseline_geomean(self):
         """Paper headline: DagHetPart clearly beats DagHetMem on average."""
@@ -71,9 +83,9 @@ class TestHeuristicValidity:
         ratios = []
         for family in ("blast", "bwa", "seismology", "genome"):
             wf = generate_workflow(family, 200, seed=2, platform=plat)
-            base = dag_het_mem(wf, plat)
-            het = dag_het_part(wf, plat, kprime=SWEEP)
-            assert base is not None and het is not None
+            base = baseline(wf, plat)
+            het = schedule(wf, plat, kprime=SWEEP)
+            assert base.feasible and het.feasible
             ratios.append(base.makespan / het.makespan)
         geo = float(np.exp(np.mean(np.log(ratios))))
         assert geo > 1.5, f"expected clear improvement, got {geo:.2f}x"
@@ -84,8 +96,8 @@ class TestHeuristicValidity:
 
         def ratio(family):
             wf = generate_workflow(family, 300, seed=3, platform=plat)
-            base = dag_het_mem(wf, plat)
-            het = dag_het_part(wf, plat, kprime=SWEEP)
+            base = baseline(wf, plat)
+            het = schedule(wf, plat, kprime=SWEEP)
             return base.makespan / het.makespan
 
         assert ratio("blast") > ratio("soykb")
@@ -94,22 +106,23 @@ class TestHeuristicValidity:
         """Paper §5.2.3: improvement persists even on NoHet."""
         plat = no_het_cluster()
         wf = generate_workflow("seismology", 200, seed=1, platform=plat)
-        base = dag_het_mem(wf, plat)
-        het = dag_het_part(wf, plat, kprime=SWEEP)
+        base = baseline(wf, plat)
+        het = schedule(wf, plat, kprime=SWEEP)
         assert het.makespan <= base.makespan
 
     def test_small_cluster(self):
         plat = small_cluster()
         wf = generate_workflow("bwa", 200, seed=1, platform=plat)
-        res = dag_het_part(wf, plat, kprime=[1, 2, 4, 8, 12, 18])
-        assert res is not None
-        assert validate_mapping(wf, res) == []
+        rep = schedule(wf, plat, kprime=[1, 2, 4, 8, 12, 18])
+        assert rep.feasible
+        assert validate_mapping(wf, rep.best) == []
 
     def test_distinct_processors(self):
         plat = default_cluster()
         wf = generate_workflow("montage", 150, seed=4, platform=plat)
-        res = dag_het_part(wf, plat, kprime=[6, 12])
-        procs = [res.quotient.proc[v] for v in res.quotient.vertices()]
+        rep = schedule(wf, plat, kprime=[6, 12])
+        q = rep.best.quotient
+        procs = [q.proc[v] for v in q.vertices()]
         assert len(procs) == len(set(procs))
 
     @settings(max_examples=10, deadline=None)
@@ -119,23 +132,33 @@ class TestHeuristicValidity:
         wf = random_layered_dag(n, seed=seed)
         from repro.core.workflows import scale_memory_to_platform
         scale_memory_to_platform(wf, plat)
-        res = dag_het_part(wf, plat, kprime=[1, 3, 8, 18])
-        if res is not None:  # instances may legitimately be infeasible
-            assert validate_mapping(wf, res) == []
+        rep = schedule(wf, plat, kprime=[1, 3, 8, 18])
+        if rep.feasible:  # instances may legitimately be infeasible
+            assert validate_mapping(wf, rep.best) == []
+        else:
+            assert rep.infeasibility is not None
 
 
 class TestStepBehaviour:
     def test_k_prime_sweep_picks_best(self):
         plat = default_cluster()
         wf = generate_workflow("blast", 150, seed=5, platform=plat)
-        best = dag_het_part(wf, plat, kprime=SWEEP)
-        single = dag_het_part(wf, plat, kprime=[36])
-        if single is not None:
+        best = schedule(wf, plat, kprime=SWEEP)
+        single = schedule(wf, plat, kprime=[36])
+        if single.feasible:
             assert best.makespan <= single.makespan + 1e-9
+
+    def test_sweep_trace_covers_every_kprime(self):
+        plat = default_cluster()
+        wf = generate_workflow("blast", 150, seed=5, platform=plat)
+        rep = schedule(wf, plat, kprime=SWEEP)
+        assert [p.k_prime for p in rep.sweep] == SWEEP
+        feasible_ms = [p.makespan for p in rep.sweep if p.feasible]
+        assert rep.makespan == min(feasible_ms)
 
     def test_bandwidth_affects_makespan(self):
         wf = generate_workflow("blast", 200, seed=1,
                                platform=default_cluster())
-        slow = dag_het_part(wf, default_cluster(beta=0.1), kprime=[13])
-        fast = dag_het_part(wf, default_cluster(beta=5.0), kprime=[13])
+        slow = schedule(wf, default_cluster(beta=0.1), kprime=[13])
+        fast = schedule(wf, default_cluster(beta=5.0), kprime=[13])
         assert fast.makespan < slow.makespan

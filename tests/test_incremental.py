@@ -248,13 +248,13 @@ class TestSwapPassPruning:
 
 @pytest.mark.slow
 def test_end_to_end_large_instance():
-    """dag_het_part completes and validates on a mid-size instance."""
+    """The scheduler completes and validates on a mid-size instance."""
     from repro.core import (
-        dag_het_part, default_cluster, generate_workflow, validate_mapping,
+        default_cluster, generate_workflow, schedule, validate_mapping,
     )
 
     plat = default_cluster()
     wf = generate_workflow("blast", 4000, seed=1, platform=plat)
-    res = dag_het_part(wf, plat, kprime=[4, 13, 36])
-    assert res is not None
-    assert validate_mapping(wf, res) == []
+    rep = schedule(wf, plat, kprime=[4, 13, 36])
+    assert rep.feasible
+    assert validate_mapping(wf, rep.best) == []

@@ -1,0 +1,295 @@
+"""The unified Scheduler/Plan API (repro.core.scheduler).
+
+Covers the k'-sweep policy, ScheduleReport JSON round-trips,
+structured infeasibility on undersized platforms (every workflow
+family), serial-vs-parallel sweep equivalence, the on_sweep_result
+reporting channel, stage toggles / custom pipelines, and the
+deprecated dag_het_part / dag_het_mem wrappers.
+"""
+import types
+
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    FAMILIES,
+    Platform,
+    Processor,
+    ScheduleReport,
+    Scheduler,
+    SchedulerConfig,
+    dag_het_mem,
+    dag_het_part,
+    default_cluster,
+    generate_workflow,
+    kprime_sweep_values,
+    random_layered_dag,
+    schedule,
+    small_cluster,
+    validate_mapping,
+)
+
+TINY = Platform([Processor("t0", 1.0, 0.5), Processor("t1", 2.0, 0.4)],
+                bandwidth=1.0)
+
+
+def _uniform_platform(k: int) -> Platform:
+    return Platform([Processor(f"p{i}", 1.0, 8.0) for i in range(k)],
+                    bandwidth=1.0)
+
+
+# ---------------------------------------------------------------------- #
+# k' sweep policy (the heuristic's Step-1 driver knob)
+# ---------------------------------------------------------------------- #
+class TestKprimeSweepPolicy:
+    small_wf = types.SimpleNamespace(n=100)      # auto => full range
+    large_wf = types.SimpleNamespace(n=10_000)   # auto => geometric subset
+
+    @pytest.mark.parametrize("k", [1, 2, 7, 64])
+    def test_full_mode_is_the_whole_range(self, k):
+        vals = kprime_sweep_values(self.large_wf, _uniform_platform(k),
+                                   "full")
+        assert vals == list(range(1, k + 1))
+
+    @pytest.mark.parametrize("k", [1, 2, 7, 64])
+    def test_auto_small_workflow_is_the_whole_range(self, k):
+        vals = kprime_sweep_values(self.small_wf, _uniform_platform(k),
+                                   "auto")
+        assert vals == list(range(1, k + 1))
+
+    @pytest.mark.parametrize("k", [1, 2, 7, 64])
+    def test_auto_large_workflow_subset_invariants(self, k):
+        vals = kprime_sweep_values(self.large_wf, _uniform_platform(k),
+                                   "auto")
+        # sorted, deduplicated, in range
+        assert vals == sorted(set(vals))
+        assert all(1 <= v <= k for v in vals)
+        # anchors: 1, k and half the platform are always swept
+        assert 1 in vals
+        assert k in vals
+        assert max(1, k // 2) in vals
+
+    def test_auto_large_workflow_k64_includes_half(self):
+        vals = kprime_sweep_values(self.large_wf, _uniform_platform(64),
+                                   "auto")
+        assert 32 in vals  # the geometric ladder (…20, 33, 53) skips it
+
+    def test_auto_large_workflow_k1_is_singleton(self):
+        vals = kprime_sweep_values(self.large_wf, _uniform_platform(1),
+                                   "auto")
+        assert vals == [1]
+
+
+# ---------------------------------------------------------------------- #
+# ScheduleReport: structure + JSON round-trips
+# ---------------------------------------------------------------------- #
+class TestScheduleReport:
+    def _feasible_report(self, workers: int = 1) -> ScheduleReport:
+        plat = default_cluster()
+        wf = generate_workflow("blast", 150, seed=5, platform=plat)
+        return schedule(wf, plat, kprime=[1, 4, 9], workers=workers)
+
+    def test_feasible_report_shape(self):
+        rep = self._feasible_report()
+        assert rep.feasible
+        assert rep.best is not None and rep.summary is not None
+        assert rep.infeasibility is None
+        assert rep.makespan == rep.summary.makespan
+        assert [p.k_prime for p in rep.sweep] == [1, 4, 9]
+        assert set(rep.stage_times) == {
+            "partition", "assign", "merge", "swap", "idle_moves"}
+        assert rep.summary.block_of_task  # per-task assignment exported
+        assert rep.summary.k_prime in (1, 4, 9)
+
+    def test_json_round_trip_feasible(self):
+        rep = self._feasible_report()
+        back = ScheduleReport.from_json(rep.to_json())
+        assert back == rep          # `best` is excluded from equality
+        assert back.best is None    # live objects don't survive JSON
+        assert back.to_json() == rep.to_json()
+
+    def test_json_round_trip_infeasible(self):
+        wf = generate_workflow("blast", 60, seed=1,
+                               platform=default_cluster())
+        rep = schedule(wf, TINY, kprime=[1, 2])
+        assert not rep.feasible
+        back = ScheduleReport.from_json(rep.to_json())
+        assert back == rep
+        assert back.infeasibility == rep.infeasibility
+        assert back.to_json() == rep.to_json()
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_infeasibility_on_undersized_platform(self, family):
+        """Every family: a too-small platform yields a populated
+        Infeasibility (never None) with an actionable diagnosis."""
+        wf = generate_workflow(family, 60, seed=1,
+                               platform=default_cluster())
+        rep = schedule(wf, TINY, kprime=[1, 2, 3])
+        assert not rep.feasible
+        assert rep.best is None
+        inf = rep.infeasibility
+        assert inf is not None
+        assert inf.stage in ("assign", "merge")
+        assert inf.reason
+        assert inf.smallest_kprime == 1
+        assert inf.attempts == 3
+        # memory deficit: how much more memory would have been needed
+        assert inf.tightest_gap is not None and inf.tightest_gap > 0
+
+    def test_baseline_infeasibility_on_undersized_platform(self):
+        wf = generate_workflow("montage", 60, seed=1,
+                               platform=default_cluster())
+        rep = schedule(wf, TINY, algorithm="dag_het_mem")
+        assert not rep.feasible
+        assert rep.infeasibility.stage == "pack"
+        assert rep.infeasibility.smallest_kprime is None
+        assert [p.k_prime for p in rep.sweep] == [None]
+
+
+# ---------------------------------------------------------------------- #
+# parallel k' sweep
+# ---------------------------------------------------------------------- #
+class TestParallelSweep:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_workers2_matches_serial(self, family):
+        plat = default_cluster()
+        wf = generate_workflow(family, 120, seed=2, platform=plat)
+        serial = schedule(wf, plat, kprime=[1, 4, 9, 19])
+        par = schedule(wf, plat, kprime=[1, 4, 9, 19], workers=2)
+        assert par.feasible == serial.feasible
+        assert par.makespan == serial.makespan  # bit-identical
+        assert ([p.makespan for p in par.sweep]
+                == [p.makespan for p in serial.sweep])
+        if par.feasible:
+            assert validate_mapping(wf, par.best) == []
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 60), n=st.integers(30, 80))
+    def test_property_workers2_equals_serial(self, seed, n):
+        """workers=2 and workers=1 pick identical best makespans on
+        arbitrary random instances (feasible or not)."""
+        plat = small_cluster()
+        wf = random_layered_dag(n, seed=seed)
+        from repro.core.workflows import scale_memory_to_platform
+        scale_memory_to_platform(wf, plat)
+        serial = schedule(wf, plat, kprime=[1, 3, 8, 18])
+        par = schedule(wf, plat, kprime=[1, 3, 8, 18], workers=2)
+        assert par.feasible == serial.feasible
+        assert par.makespan == serial.makespan
+
+    @pytest.mark.slow
+    def test_workers_match_serial_n1000(self):
+        """Acceptance-scale check: n=1000, parallel == serial."""
+        plat = default_cluster()
+        wf = generate_workflow("seismology", 1000, seed=1, platform=plat)
+        serial = schedule(wf, plat, kprime=[1, 4, 9, 19, 36])
+        par = schedule(wf, plat, kprime=[1, 4, 9, 19, 36], workers=4)
+        assert par.makespan == serial.makespan
+
+    def test_time_budget_truncates_but_completes_one(self):
+        plat = default_cluster()
+        wf = generate_workflow("bwa", 150, seed=3, platform=plat)
+        rep = schedule(wf, plat, kprime=[1, 4, 9, 19], time_budget_s=0.0)
+        assert rep.truncated
+        assert len(rep.sweep) == 1  # at least (and here exactly) one k'
+        assert rep.feasible or rep.infeasibility is not None
+
+
+# ---------------------------------------------------------------------- #
+# reporting channel: verbose + on_sweep_result
+# ---------------------------------------------------------------------- #
+class TestReportingChannel:
+    def test_callback_receives_every_point_in_order(self):
+        plat = default_cluster()
+        wf = generate_workflow("blast", 120, seed=4, platform=plat)
+        seen = []
+        rep = schedule(wf, plat, kprime=[1, 4, 9],
+                       on_sweep_result=seen.append)
+        assert [p.k_prime for p in seen] == [1, 4, 9]
+        assert [p.makespan for p in seen] == [p.makespan
+                                              for p in rep.sweep]
+
+    def test_callback_fires_in_parent_with_workers(self):
+        plat = default_cluster()
+        wf = generate_workflow("blast", 120, seed=4, platform=plat)
+        seen = []
+        schedule(wf, plat, kprime=[1, 4, 9], workers=2,
+                 on_sweep_result=seen.append)
+        assert [p.k_prime for p in seen] == [1, 4, 9]
+
+    def test_verbose_prints_through_the_same_channel(self, capsys):
+        plat = default_cluster()
+        wf = generate_workflow("blast", 120, seed=4, platform=plat)
+        schedule(wf, plat, kprime=[1, 4], verbose=True)
+        out = capsys.readouterr().out
+        assert "k'=1" in out and "k'=4" in out and "makespan" in out
+
+
+# ---------------------------------------------------------------------- #
+# stages: toggles, custom pipelines, registry
+# ---------------------------------------------------------------------- #
+class TestStages:
+    def test_step4_toggles(self):
+        plat = default_cluster()
+        wf = generate_workflow("montage", 150, seed=4, platform=plat)
+        full = schedule(wf, plat, kprime=[6, 12])
+        plain = schedule(wf, plat, kprime=[6, 12],
+                         swap=False, idle_moves=False)
+        assert plain.feasible
+        assert validate_mapping(wf, plain.best) == []
+        assert set(plain.stage_times) == {"partition", "assign", "merge"}
+        # refinement only ever improves the same merge result
+        assert full.makespan <= plain.makespan + 1e-9
+
+    def test_custom_stage_list_equals_toggled_pipeline(self):
+        plat = default_cluster()
+        wf = generate_workflow("montage", 150, seed=4, platform=plat)
+        toggled = schedule(wf, plat, kprime=[6, 12],
+                           swap=False, idle_moves=False)
+        explicit = schedule(wf, plat, kprime=[6, 12],
+                            stages=("partition", "assign", "merge"))
+        assert explicit.makespan == toggled.makespan
+
+    def test_unknown_algorithm_raises(self):
+        with pytest.raises(ValueError, match="unknown algorithm"):
+            Scheduler(SchedulerConfig(algorithm="nope")).stage_names()
+
+    def test_stage_names_respect_config(self):
+        s = Scheduler(SchedulerConfig(swap=False))
+        assert s.stage_names() == ("partition", "assign", "merge",
+                                   "idle_moves")
+        assert Scheduler(SchedulerConfig(
+            algorithm="dag_het_mem")).stage_names() == ("pack",)
+
+
+# ---------------------------------------------------------------------- #
+# deprecated wrappers
+# ---------------------------------------------------------------------- #
+class TestDeprecatedWrappers:
+    def test_dag_het_part_warns_and_matches_scheduler(self):
+        plat = default_cluster()
+        wf = generate_workflow("blast", 120, seed=4, platform=plat)
+        with pytest.warns(DeprecationWarning, match="dag_het_part"):
+            res = dag_het_part(wf, plat, kprime=[1, 4, 9])
+        rep = schedule(wf, plat, kprime=[1, 4, 9])
+        assert res is not None
+        assert res.makespan == rep.makespan
+
+    def test_dag_het_mem_warns_and_matches_scheduler(self):
+        plat = default_cluster()
+        wf = generate_workflow("blast", 120, seed=4, platform=plat)
+        with pytest.warns(DeprecationWarning, match="dag_het_mem"):
+            res = dag_het_mem(wf, plat)
+        rep = schedule(wf, plat, algorithm="dag_het_mem")
+        assert res is not None
+        assert res.makespan == rep.makespan
+
+    def test_wrappers_keep_the_none_contract(self):
+        wf = random_layered_dag(60, seed=1)
+        with pytest.warns(DeprecationWarning):
+            assert dag_het_mem(wf, TINY) is None
+        with pytest.warns(DeprecationWarning):
+            assert dag_het_part(wf, TINY, kprime=[1, 2]) is None

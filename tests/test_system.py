@@ -2,10 +2,9 @@
 import numpy as np
 
 from repro.core import (
-    dag_het_mem,
-    dag_het_part,
     default_cluster,
     generate_workflow,
+    schedule,
     validate_mapping,
 )
 
@@ -15,19 +14,19 @@ def test_end_to_end_schedule_and_validate():
     validate every DAGP-PM constraint -> heuristic beats baseline."""
     plat = default_cluster()
     wf = generate_workflow("seismology", 300, seed=7, platform=plat)
-    base = dag_het_mem(wf, plat)
-    het = dag_het_part(wf, plat, kprime=[1, 4, 9, 19, 36])
-    assert base is not None and het is not None
-    assert validate_mapping(wf, base) == []
-    assert validate_mapping(wf, het) == []
+    base = schedule(wf, plat, algorithm="dag_het_mem")
+    het = schedule(wf, plat, kprime=[1, 4, 9, 19, 36])
+    assert base.feasible and het.feasible
+    assert validate_mapping(wf, base.best) == []
+    assert validate_mapping(wf, het.best) == []
     assert het.makespan <= base.makespan
 
 
 def test_estimated_makespan_is_deterministic():
     plat = default_cluster()
     wf = generate_workflow("bwa", 250, seed=3, platform=plat)
-    r1 = dag_het_part(wf, plat, kprime=[9, 19])
-    r2 = dag_het_part(wf, plat, kprime=[9, 19])
+    r1 = schedule(wf, plat, kprime=[9, 19])
+    r2 = schedule(wf, plat, kprime=[9, 19])
     assert r1.makespan == r2.makespan
 
 
