@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: verify test fast bench bench-large bench-sweep
+.PHONY: verify test fast bench bench-large bench-sweep bench-sim
 
 # tier-1 verification (ROADMAP.md)
 verify:
@@ -28,3 +28,7 @@ bench-large:
 # parallel-vs-serial k' sweep on the n=1000 suite -> BENCH_runtime.json
 bench-sweep:
 	python -m benchmarks.bench_runtime --sweep
+
+# analytic-vs-simulated gap (contention + jitter) -> BENCH_runtime.json
+bench-sim:
+	python -m benchmarks.bench_sim

@@ -1,0 +1,110 @@
+"""Analytic-vs-simulated gap sweep (``make bench-sim``).
+
+The optimizer prices mappings with the paper's contention-free
+bottom-weight formula; :mod:`repro.sim` executes them.  This benchmark
+quantifies how far reality (richer communication, duration jitter)
+drifts from the proxy on the n=1000 suite:
+
+* **paper model** — asserts the simulated makespan is *bit-identical*
+  to the analytic value (the subsystem's correctness anchor; a gap
+  here is a bug, not a finding);
+* **fair-share contention** — egress/ingress/link max-min sharing; the
+  ``contention_gap`` column is simulated/analytic (≥ 1);
+* **jitter envelope** — N seeded lognormal perturbations of the block
+  durations; ``jitter_lo``/``jitter_hi`` bracket the makespan relative
+  to the deterministic value.
+
+Results land under the ``"sim"`` key of ``BENCH_runtime.json`` with
+platform context, so the fidelity trajectory of the analytic proxy is
+tracked across PRs alongside the runtime tiers.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+from repro.core import default_cluster, schedule
+from repro.sim import FairShareComm, simulate
+
+from .bench_runtime import _load_results, _write_results
+from .common import KPRIME, emit, geomean, workflow_suite
+
+JITTER = 0.2
+REPLICAS = 20
+
+
+def run(n: int = 1000, seeds=(1,), *, jitter: float = JITTER,
+        replicas: int = REPLICAS, write_json: bool = True) -> dict:
+    plat = default_cluster()
+    results = _load_results()
+    tier_out = results.setdefault("sim", {})
+    rows: list[dict] = []
+    comm_name = FairShareComm().name
+
+    def snapshot() -> None:
+        """Per-family checkpoint: a partial run leaves usable data."""
+        tier_out[f"n={n}"] = {
+            "platform": plat.name,
+            "beta": plat.bandwidth,
+            "comm": comm_name,
+            "jitter": jitter,
+            "replicas": replicas,
+            "kprime": list(KPRIME),
+            "cpus": os.cpu_count(),
+            "families": rows,
+            "contention_gap_geomean": geomean(
+                [r.get("contention_gap") for r in rows]),
+            "jitter_hi_geomean": geomean(
+                [r.get("jitter_hi") for r in rows]),
+        }
+        if write_json:
+            _write_results(results)
+
+    for family, _, seed, wf in workflow_suite(plat, (n,), seeds):
+        rep = schedule(wf, plat, algorithm="dag_het_part", kprime=KPRIME)
+        if not rep.feasible:
+            rows.append({"family": family, "seed": seed,
+                         "infeasible": rep.infeasibility.reason})
+            snapshot()
+            continue
+        res = rep.best
+        t0 = time.perf_counter()
+        paper = simulate(res, memory=False, record_events=False)
+        assert paper.makespan == res.makespan, (
+            f"bit-exactness anchor broken on {family}: "
+            f"{paper.makespan} != {res.makespan}"
+        )
+        cont = simulate(res, comm="fair-share", memory=False,
+                        record_events=False)
+        env = simulate(res, jitter=jitter, replicas=replicas,
+                       memory=False, record_events=False).envelope
+        sim_s = time.perf_counter() - t0
+        gap = cont.makespan / res.makespan
+        row = {
+            "family": family, "seed": seed,
+            "analytic_ms": res.makespan,
+            "paper_sim_ms": paper.makespan,
+            "contention_ms": cont.makespan,
+            "contention_gap": gap,
+            "jitter_lo": env.lo / res.makespan,
+            "jitter_mean": env.mean / res.makespan,
+            "jitter_hi": env.hi / res.makespan,
+            "sim_s": sim_s,
+        }
+        rows.append(row)
+        emit(f"sim/n={n}/{family}/contention_gap", gap, "sim_vs_analytic")
+        emit(f"sim/n={n}/{family}/jitter_hi", row["jitter_hi"],
+             f"lognormal({jitter});replicas={replicas}")
+        snapshot()
+    out = tier_out.get(f"n={n}", {})
+    emit(f"sim/n={n}/contention_gap_geomean",
+         out.get("contention_gap_geomean", float("nan")),
+         "paper_model_is_bit_exact")
+    return out
+
+
+if __name__ == "__main__":
+    n = int(sys.argv[sys.argv.index("--n") + 1]) if "--n" in sys.argv \
+        else 1000
+    run(n=n)

@@ -43,6 +43,35 @@ the best :class:`MappingResult` *or* a structured
 and the full k'→makespan sweep trace (``to_json``/``from_json`` for
 benchmark artifacts).  The legacy :func:`dag_het_part` /
 :func:`dag_het_mem` entry points are deprecated thin wrappers over it.
+
+Simulation
+----------
+The analytic makespan is a *proxy*; :mod:`repro.sim` is the ground
+truth that executes a mapping as a discrete-event schedule replay::
+
+    from repro.sim import simulate
+    sim = simulate(schedule(wf, platform).best)   # paper comm model
+    sim.makespan      # bit-identical to makespan(q, platform)
+    sim.memory        # time-resolved occupancy + transient violations
+    print(sim.gantt())
+
+or inline, as the optional ``simulate`` pipeline stage:
+``schedule(wf, platform, simulate=True).sim``.  Communication models
+are pluggable (``comm="contention-free"`` — the paper's β model, whose
+deterministic replay is the bit-exact anchor — or ``comm="fair-share"``
+for max-min egress/ingress/link sharing; implement the small protocol
+in :mod:`repro.sim.comm` to add one).  ``jitter=σ, replicas=N`` adds a
+seeded robustness envelope.  ``validate_mapping(...,
+memory_trace=True)`` replays the schedule through the simulator's
+memory tracker and pinpoints the first time/processor of any transient
+violation — feasibility of the *trace*, not just of the block sums.
+Per-link bandwidth overrides (:meth:`Platform.with_link_bandwidth`,
+composable with :meth:`Platform.without` for failure scenarios) are
+honoured by the simulator while the analytic formula keeps the uniform
+β; ``make bench-sim`` tracks the resulting gap.  Workflows serialize
+via :func:`repro.core.workflows.to_json` / ``from_json`` (a
+WfCommons-flavored schema) so instances and traces can be saved,
+reloaded and swapped for real dumps later.
 """
 from .dag import QuotientGraph, Workflow, build_quotient
 from .platform import (

@@ -190,6 +190,7 @@ def validate_mapping(
     result: MappingResult,
     *,
     exact_limit: int = 0,
+    memory_trace: bool = False,
 ) -> list[str]:
     """Check all DAGP-PM constraints; returns a list of violations.
 
@@ -197,6 +198,16 @@ def validate_mapping(
     * acyclic quotient graph,
     * injective block→processor mapping,
     * every block's memory requirement within its processor's memory.
+
+    ``memory_trace=True`` additionally replays the schedule through the
+    simulator's memory tracker (:mod:`repro.sim`) and reports every
+    *transient* violation with its first time-point and processor.
+    Block sums are priced with the best traversal known (min of witness
+    and greedy re-derivation), while the trace replays the traversal
+    execution would actually use — so a plan whose witness order
+    overflows is caught here even when a better traversal makes the
+    block sum pass.  Trace checking requires the structural constraints
+    to hold and is skipped (with a note) when they do not.
 
     ``r_{V_i}`` is the *minimum* peak over traversals; any witness order
     (e.g. the baseline's packing traversal or the heuristic's composed
@@ -208,6 +219,7 @@ def validate_mapping(
     from .memdag import block_requirement, simulate_peak_members
 
     errors: list[str] = []
+    simulable = True  # trace needs an acyclic, fully assigned quotient
     q = result.quotient
     covered: set[int] = set()
     for vid, members in q.members.items():
@@ -221,11 +233,13 @@ def validate_mapping(
         )
     if not q.is_acyclic():
         errors.append("quotient graph is cyclic")
+        simulable = False
     used: dict[int, int] = {}
     for vid in q.vertices():
         pj = q.proc[vid]
         if pj is None:
             errors.append(f"block {vid} unassigned")
+            simulable = False
             continue
         if pj in used:
             errors.append(f"processor {pj} used by blocks {used[pj]} and {vid}")
@@ -255,4 +269,22 @@ def validate_mapping(
                 f"block {vid}: requirement {r:.3f} exceeds memory "
                 f"{cap:.3f} of processor {pj}"
             )
+    if memory_trace:
+        if not simulable:
+            errors.append(
+                "memory trace skipped: quotient not simulable "
+                "(cyclic or unassigned blocks)"
+            )
+        else:
+            # deferred import: sim builds on core
+            from repro.sim import trace_memory
+
+            trace = trace_memory(result, result.platform)
+            for v in trace.violations:
+                errors.append(
+                    f"transient memory violation at t={v.time:.6g} on "
+                    f"processor {v.proc} (block {v.vertex}, task "
+                    f"{v.task}): occupancy {v.occupancy:.6g} exceeds "
+                    f"memory {v.capacity:.6g}"
+                )
     return errors

@@ -39,6 +39,7 @@ from .dag import Workflow
 __all__ = [
     "simulate_peak",
     "simulate_peak_members",
+    "occupancy_steps",
     "exact_min_peak",
     "greedy_min_peak",
     "block_requirement",
@@ -96,25 +97,25 @@ def simulate_peak(
     return peak
 
 
-def simulate_peak_members(
-    wf: Workflow,
-    members,
-    order: Sequence[int],
-) -> float:
-    """Transient peak of executing block ``members`` of ``wf`` in
-    ``order`` — like :func:`simulate_peak` but directly on the original
-    workflow (no subgraph/boundary materialization), with edges leaving
-    or entering ``members`` treated as external per the module memory
-    model.  ``order`` must cover ``members`` exactly and respect
-    precedence *within* the block (not checked — this is the hot-path
-    witness evaluator; :func:`simulate_peak` is the checked variant).
+def occupancy_steps(wf: Workflow, members, order: Sequence[int]):
+    """Yield ``(u, during, live_after)`` along a block traversal.
 
-    Excludes the persistent base (callers add Σ persistent).
+    The single source of truth for the transient-occupancy
+    accumulation over the original workflow (no subgraph/boundary
+    materialization), with edges leaving or entering ``members``
+    treated as external per the module memory model: ``during`` is the
+    occupancy while ``u`` runs, ``live_after`` the internal live set
+    once it completes.  Shared by the witness evaluator below and the
+    simulator's time-resolved memory tracker
+    (:mod:`repro.sim.memory`), which must price states bit-identically
+    to :func:`block_requirement`.  ``order`` must cover ``members``
+    exactly and respect precedence *within* the block (not checked —
+    this is the hot path; :func:`simulate_peak` is the checked
+    variant).  Excludes the persistent base (callers add Σ persistent).
     """
     members = members if isinstance(members, (set, frozenset)) \
         else set(members)
     live = 0.0
-    peak = 0.0
     for u in order:
         int_in = 0.0
         ext_in = 0.0
@@ -130,9 +131,22 @@ def simulate_peak_members(
             if v in members:
                 int_out += c
         during = live + ext_in + wf.mem[u] + out_total
+        live += int_out - int_in
+        yield u, during, live
+
+
+def simulate_peak_members(
+    wf: Workflow,
+    members,
+    order: Sequence[int],
+) -> float:
+    """Transient peak of executing block ``members`` of ``wf`` in
+    ``order`` — ``max`` over the :func:`occupancy_steps` states (see
+    there for the memory model and the unchecked-precedence caveat)."""
+    peak = 0.0
+    for _, during, _ in occupancy_steps(wf, members, order):
         if during > peak:
             peak = during
-        live += int_out - int_in
     return peak
 
 

@@ -2,6 +2,11 @@
 
 A platform is a set of processors, each with an individual memory size
 ``M_j`` and speed ``s_j``, plus a uniform interconnect bandwidth ``β``.
+Individual directed links may override the uniform β
+(:meth:`Platform.with_link_bandwidth`); the analytic makespan keeps
+using the uniform value (the paper's model) while the simulator
+(:mod:`repro.sim`) honours per-link overrides — the gap between the two
+is part of what ``make bench-sim`` measures.
 
 Ships the paper's experimental clusters (Tables 2–3) and TPU-fleet
 presets used by the framework's placement layer, where a "processor" is
@@ -9,6 +14,7 @@ a TPU chip or a model-parallel group acting as one memory domain.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field, replace
 
 __all__ = [
@@ -33,11 +39,21 @@ class Processor:
 
 @dataclass
 class Platform:
-    """Computing system S with k processors and uniform bandwidth β."""
+    """Computing system S with k processors and uniform bandwidth β.
+
+    ``link_bandwidth`` maps *directed* processor-index pairs ``(i, j)``
+    to a bandwidth overriding the uniform β on that link; every other
+    link keeps β.  Overrides compose with the other platform
+    transforms: :meth:`with_bandwidth` rescales only the uniform base
+    and :meth:`without` reindexes surviving links, so failure scenarios
+    preserve the link configuration.
+    """
 
     procs: list[Processor]
     bandwidth: float = 1.0
     name: str = "cluster"
+    link_bandwidth: dict[tuple[int, int], float] = field(
+        default_factory=dict)
 
     @property
     def k(self) -> int:
@@ -62,13 +78,59 @@ class Platform:
     def min_memory(self) -> float:
         return min(p.memory for p in self.procs)
 
+    def bandwidth_between(self, i: int, j: int) -> float:
+        """Bandwidth of the directed link ``i → j``.
+
+        Per-link overrides win over the uniform β; the ``i == j``
+        "link" is infinitely fast (data staying on a processor is not
+        transferred).
+        """
+        if i == j:
+            return math.inf
+        return self.link_bandwidth.get((i, j), self.bandwidth)
+
     def with_bandwidth(self, beta: float) -> "Platform":
-        return Platform(list(self.procs), beta, f"{self.name}@beta={beta}")
+        """Uniform-β rescale; per-link overrides are kept as-is."""
+        return Platform(list(self.procs), beta, f"{self.name}@beta={beta}",
+                        dict(self.link_bandwidth))
+
+    def with_link_bandwidth(self, i: int, j: int, beta: float, *,
+                            symmetric: bool = True) -> "Platform":
+        """Platform with link ``i → j`` (and ``j → i`` when
+        ``symmetric``) overridden to ``beta``.
+
+        ``beta`` must be positive (``math.inf`` is fine): a transfer
+        over a zero-bandwidth link would never complete.  Model a dead
+        *processor* with :meth:`without`; a degraded link with a small
+        positive bandwidth.
+        """
+        if not beta > 0:
+            raise ValueError(
+                f"link bandwidth must be positive, got {beta!r} for "
+                f"link {i} -> {j}"
+            )
+        links = dict(self.link_bandwidth)
+        links[(i, j)] = beta
+        if symmetric:
+            links[(j, i)] = beta
+        return Platform(list(self.procs), self.bandwidth, self.name, links)
 
     def without(self, failed: set[int]) -> "Platform":
-        """Platform after losing processors ``failed`` (elastic rescale)."""
-        procs = [p for j, p in enumerate(self.procs) if j not in failed]
-        return Platform(procs, self.bandwidth, f"{self.name}-degraded")
+        """Platform after losing processors ``failed`` (elastic rescale).
+
+        Surviving per-link overrides are reindexed to the compacted
+        processor numbering, so a degraded platform keeps the same
+        link configuration between the processors that remain.
+        """
+        keep = [j for j in range(self.k) if j not in failed]
+        new_index = {old: i for i, old in enumerate(keep)}
+        links = {
+            (new_index[a], new_index[b]): bw
+            for (a, b), bw in self.link_bandwidth.items()
+            if a in new_index and b in new_index
+        }
+        return Platform([self.procs[j] for j in keep], self.bandwidth,
+                        f"{self.name}-degraded", links)
 
 
 # ---------------------------------------------------------------------- #

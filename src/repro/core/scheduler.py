@@ -28,6 +28,8 @@ Paper-step ↔ stage-name map::
     Step 4  swap         best-improvement block swaps (Algorithm 5)
     Step 4  idle_moves   critical-path moves to faster idle processors
     §4.1    pack         DagHetMem min-peak traversal packing
+    —       simulate     discrete-event replay (repro.sim), off by
+                         default (``SchedulerConfig(simulate=True)``)
 
 Determinism: every stage is deterministic, and the sweep reduction
 scans results in sweep order with a strict ``<``, so ``workers=N`` and
@@ -219,6 +221,12 @@ class ScheduleReport:
     def makespan(self) -> float | None:
         return self.summary.makespan if self.summary else None
 
+    @property
+    def sim(self):
+        """The best mapping's :class:`repro.sim.SimReport` (present when
+        the run included the ``simulate`` stage), else ``None``."""
+        return self.best.extras.get("sim") if self.best else None
+
     def to_dict(self) -> dict:
         return {
             "algorithm": self.algorithm,
@@ -282,6 +290,7 @@ class StageContext:
     ev: IncrementalEvaluator | None = None
     result: MappingResult | None = None
     failure: StageFailure | None = None
+    sim_options: dict | None = None         # simulate-stage kwargs
 
 
 @runtime_checkable
@@ -411,6 +420,48 @@ class PackStage:
             ctx.result = res
 
 
+def _materialize_result(ctx: StageContext, kp: int | None) -> None:
+    """Lift a successful heuristic run's evaluator state into a
+    :class:`MappingResult` (idempotent; ``pack`` sets ``ctx.result``
+    itself)."""
+    if ctx.result is not None or ctx.failure is not None or ctx.ev is None:
+        return
+    ms = ctx.ev.makespan()
+    ctx.result = MappingResult(
+        algo="DagHetPart",
+        quotient=ctx.q,
+        platform=ctx.platform,
+        makespan=ms,
+        runtime_s=0.0,
+        k_used=ctx.q.n_vertices,
+        # witness traversals double as feasibility certificates for
+        # composed (bound-priced) blocks during validation
+        extras={"k_prime": kp,
+                "orders": ctx.reqs.witness_orders(ctx.q)},
+    )
+
+
+class SimulateStage:
+    """Post-pipeline replay: attach a :class:`repro.sim.SimReport` to
+    the mapping (``extras["sim"]``).  Off by default
+    (``SchedulerConfig(simulate=True)`` enables it); runs once per
+    sweep point, so enable it together with a narrow k' sweep or read
+    ``ScheduleReport.sim`` for the winner only.  Options come from
+    ``SchedulerConfig.sim_options`` (``comm``, ``jitter``, ...)."""
+
+    name = "simulate"
+    toggle = "simulate"
+
+    def run(self, ctx: StageContext) -> None:
+        _materialize_result(ctx, ctx.k_prime)
+        if ctx.result is None:
+            return
+        from repro import sim  # deferred: core must not require sim
+
+        ctx.result.extras["sim"] = sim.simulate(
+            ctx.result, ctx.platform, **(ctx.sim_options or {}))
+
+
 _STAGES: dict[str, Stage] = {}
 
 #: algorithm name -> pipeline (tuple of registered stage names)
@@ -445,11 +496,13 @@ def register_pipeline(algorithm: str, stage_names: Sequence[str]) -> None:
 
 
 for _stage in (PartitionStage(), AssignStage(), MergeStage(),
-               SwapStage(), IdleMoveStage(), PackStage()):
+               SwapStage(), IdleMoveStage(), PackStage(),
+               SimulateStage()):
     register_stage(_stage)
 register_pipeline("dag_het_part",
-                  ("partition", "assign", "merge", "swap", "idle_moves"))
-register_pipeline("dag_het_mem", ("pack",))
+                  ("partition", "assign", "merge", "swap", "idle_moves",
+                   "simulate"))
+register_pipeline("dag_het_mem", ("pack", "simulate"))
 
 
 # ---------------------------------------------------------------------- #
@@ -471,7 +524,13 @@ class SchedulerConfig:
     :class:`SweepPoint` in sweep order, in the parent process, in both
     execution modes — ``verbose`` merely installs a default printer on
     the same channel.  ``stages`` overrides the algorithm's registered
-    pipeline with an explicit stage-name sequence.
+    pipeline with an explicit stage-name sequence.  ``simulate``
+    enables the post-pipeline discrete-event replay stage
+    (:mod:`repro.sim`), configured by the ``sim_options`` keyword dict
+    (``comm``, ``jitter``, ``replicas``, ``memory``, ...); it runs once
+    per sweep point and attaches a :class:`repro.sim.SimReport` to
+    each mapping's ``extras["sim"]`` — read ``ScheduleReport.sim`` for
+    the winner's.
     """
 
     algorithm: str = "dag_het_part"
@@ -484,6 +543,8 @@ class SchedulerConfig:
     verbose: bool = False
     on_sweep_result: Callable[[SweepPoint], None] | None = None
     stages: Sequence[str] | None = None
+    simulate: bool = False
+    sim_options: dict | None = None
 
 
 @dataclass(frozen=True)
@@ -492,6 +553,7 @@ class _RunSpec:
 
     stage_names: tuple[str, ...]
     exact_limit: int
+    sim_options: dict | None = None
 
 
 # ---------------------------------------------------------------------- #
@@ -506,7 +568,8 @@ def _execute_pipeline(
 ) -> tuple[MappingResult | None, SweepPoint]:
     t_run = time.perf_counter()
     ctx = StageContext(wf=wf, platform=platform, k_prime=kp,
-                       exact_limit=spec.exact_limit, memo=memo)
+                       exact_limit=spec.exact_limit, memo=memo,
+                       sim_options=spec.sim_options)
     stage_times: dict[str, float] = {}
     for name in spec.stage_names:
         stage = get_stage(name)
@@ -516,21 +579,9 @@ def _execute_pipeline(
                              + time.perf_counter() - t0)
         if ctx.failure is not None:
             break
-    if ctx.failure is None and ctx.result is None:
-        # heuristic pipelines leave the mapping in the evaluator state
-        ms = ctx.ev.makespan()
-        ctx.result = MappingResult(
-            algo="DagHetPart",
-            quotient=ctx.q,
-            platform=platform,
-            makespan=ms,
-            runtime_s=0.0,
-            k_used=ctx.q.n_vertices,
-            # witness traversals double as feasibility certificates for
-            # composed (bound-priced) blocks during validation
-            extras={"k_prime": kp,
-                    "orders": ctx.reqs.witness_orders(ctx.q)},
-        )
+    # heuristic pipelines leave the mapping in the evaluator state (a
+    # trailing SimulateStage already materialized it when enabled)
+    _materialize_result(ctx, kp)
     dt = time.perf_counter() - t_run
     if ctx.result is not None:
         ctx.result.runtime_s = dt
@@ -675,7 +726,8 @@ class Scheduler:
         """Run the configured pipeline; always a :class:`ScheduleReport`."""
         cfg = self.config
         t0 = time.perf_counter()
-        spec = _RunSpec(self.stage_names(), cfg.exact_limit)
+        spec = _RunSpec(self.stage_names(), cfg.exact_limit,
+                        cfg.sim_options)
         sweep = self.sweep_values(wf, platform)
         callbacks: list[Callable[[SweepPoint], None]] = []
         if cfg.verbose:

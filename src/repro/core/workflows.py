@@ -14,6 +14,8 @@ still fits on some processor of the target platform.
 """
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
 from .dag import Workflow
@@ -21,11 +23,14 @@ from .platform import Platform
 
 __all__ = [
     "FAMILIES",
+    "SCHEMA_VERSION",
     "generate_workflow",
     "random_weights",
     "scale_memory_to_platform",
     "real_like_workflows",
     "random_layered_dag",
+    "to_json",
+    "from_json",
 ]
 
 FAMILIES = (
@@ -352,4 +357,80 @@ def random_layered_dag(
     for u in range(wf.n):
         wf.work[u] = float(rng.uniform(1, 1000))
         wf.mem[u] = float(rng.uniform(1, 192))
+    return wf
+
+
+# ---------------------------------------------------------------------- #
+# serialization: a WfCommons-flavored JSON schema.
+#
+# WfCommons instances describe tasks (name/id/parents/children) in
+# ``workflow.specification`` and measured runtimes in
+# ``workflow.execution``; files carry the data volumes.  We mirror that
+# split with unit-agnostic weight keys ("work", "memory", "persistent",
+# file "size") and make files explicit ``source -> target`` records so
+# the round trip is exact.  Real WfCommons dumps map onto this shape by
+# renaming keys (runtimeInSeconds -> work, sizeInBytes -> size), which
+# is what keeps the door open for dropping real instances in later.
+# ---------------------------------------------------------------------- #
+SCHEMA_VERSION = "repro-wfcommons-1.0"
+
+
+def to_json(wf: Workflow, *, indent: int | None = None) -> str:
+    """Serialize ``wf`` to the WfCommons-flavored JSON schema."""
+    tasks = []
+    execution = []
+    files = []
+    for u in range(wf.n):
+        tasks.append({
+            "id": f"t{u}",
+            "name": wf.labels[u],
+            "parents": [f"t{p}" for p in sorted(wf.pred[u])],
+            "children": [f"t{c}" for c in sorted(wf.succ[u])],
+        })
+        execution.append({
+            "id": f"t{u}",
+            "work": wf.work[u],
+            "memory": wf.mem[u],
+            "persistent": wf.persistent[u],
+        })
+        for v in sorted(wf.succ[u]):
+            files.append({
+                "id": f"t{u}->t{v}",
+                "size": wf.succ[u][v],
+                "source": f"t{u}",
+                "target": f"t{v}",
+            })
+    doc = {
+        "name": wf.name,
+        "schemaVersion": SCHEMA_VERSION,
+        "workflow": {
+            "specification": {"tasks": tasks, "files": files},
+            "execution": {"tasks": execution},
+        },
+    }
+    return json.dumps(doc, indent=indent)
+
+
+def from_json(text: str) -> Workflow:
+    """Rebuild a :class:`Workflow` from :func:`to_json` output.
+
+    Tasks are numbered by their position in ``specification.tasks``
+    (ids may be arbitrary strings); files are authoritative for edges
+    and their weights, ``parents``/``children`` being derived views.
+    Execution entries are optional per task (weights default to the
+    ``add_task`` defaults, as in WfCommons instances lacking history).
+    """
+    doc = json.loads(text)
+    spec = doc["workflow"]["specification"]
+    wf = Workflow(name=doc.get("name", "workflow"))
+    index: dict[str, int] = {}
+    for t in spec["tasks"]:
+        index[t["id"]] = wf.add_task(label=t.get("name"))
+    for f in spec.get("files", []):
+        wf.add_edge(index[f["source"]], index[f["target"]], f["size"])
+    for e in doc["workflow"].get("execution", {}).get("tasks", []):
+        u = index[e["id"]]
+        wf.work[u] = float(e.get("work", wf.work[u]))
+        wf.mem[u] = float(e.get("memory", wf.mem[u]))
+        wf.persistent[u] = float(e.get("persistent", wf.persistent[u]))
     return wf

@@ -1,0 +1,186 @@
+"""The discrete-event core: replay a block schedule on a platform.
+
+:func:`run_engine` executes a set of :class:`BlockSpec` compute units
+(quotient vertices pinned to processors) connected by :class:`EdgeSpec`
+transfers, under a pluggable communication model
+(:mod:`repro.sim.comm`).  The event loop interleaves two streams —
+block-finish events (a heap owned by the engine) and transfer
+completions (owned by the comm model) — processing them in global time
+order with deterministic tie-breaking (block finishes first, then
+transfers by edge key).
+
+Semantics (the paper's execution model, §3.3):
+
+* a block occupies its processor for ``duration`` time units, starting
+  once **all** incoming transfers have completed and the processor is
+  free (blocks sharing a processor serialize in ready-time order —
+  a no-op for the paper's injective mappings);
+* every outgoing quotient edge starts transferring the moment its
+  source block finishes; the comm model decides when it lands.
+
+Bit-exactness anchor (CPM duality)
+----------------------------------
+The analytic makespan (Eq. (2)) folds bottom weights from the sinks::
+
+    l_v = w_v/s_v + max_child(c/beta + l_child)
+
+A forward ASAP replay folds the *same* terms from the sources, so in
+float64 it agrees only to round-off (addition is not associative).
+Running this very engine on the **transposed** DAG — the classic
+critical-path-method backward pass — computes each block's finish time
+as ``fl(max_child(fl(l_child + c/beta)) + w_v/s_v)``: the identical
+operand pairs as the recursion above, merely swapped within each
+addition, and IEEE-754 addition *is* commutative.  Hence the backward
+pass's horizon equals ``repro.core.makespan.makespan`` **bit-exactly**
+under contention-free deterministic settings — a strong end-to-end
+check that the event loop implements the paper's model, not an
+approximation of it.  :func:`repro.sim.simulate` runs the forward pass
+for the trace and the backward pass for the canonical makespan.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+from .report import SimEvent
+
+__all__ = ["BlockSpec", "EdgeSpec", "EngineTrace", "run_engine",
+           "transpose_edges"]
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """One schedulable compute unit (a quotient block on a processor)."""
+
+    vid: int
+    proc: int
+    duration: float
+
+
+@dataclass(frozen=True)
+class EdgeSpec:
+    """One aggregated inter-block transfer of ``volume`` units."""
+
+    src: int
+    dst: int
+    volume: float
+
+
+@dataclass
+class EngineTrace:
+    """Raw engine output; :func:`repro.sim.simulate` dresses it up."""
+
+    start: dict[int, float]
+    finish: dict[int, float]
+    xfer_start: dict[tuple[int, int], float]
+    xfer_finish: dict[tuple[int, int], float]
+    events: list[SimEvent] = field(default_factory=list)
+    horizon: float = 0.0
+
+
+def transpose_edges(edges: list[EdgeSpec]) -> list[EdgeSpec]:
+    """The reversed-DAG edge set (for the CPM backward pass)."""
+    return [EdgeSpec(e.dst, e.src, e.volume) for e in edges]
+
+
+def run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
+               platform, *, record_events: bool = True) -> EngineTrace:
+    """Replay ``blocks``/``edges`` under ``comm``; see module docstring.
+
+    Raises ``ValueError`` when the block graph is cyclic (some block
+    can never start).
+    """
+    by_vid = {b.vid: b for b in blocks}
+    if len(by_vid) != len(blocks):
+        raise ValueError("duplicate block vid")
+    out_edges: dict[int, list[EdgeSpec]] = {v: [] for v in by_vid}
+    pending: dict[int, int] = {v: 0 for v in by_vid}
+    seen_edges: set[tuple[int, int]] = set()
+    for e in edges:
+        # (src, dst) keys transfers throughout (quotient edges are
+        # aggregated); duplicates would alias in the comm models
+        if (e.src, e.dst) in seen_edges:
+            raise ValueError(f"duplicate edge {(e.src, e.dst)}")
+        seen_edges.add((e.src, e.dst))
+        out_edges[e.src].append(e)
+        pending[e.dst] += 1
+    for v in out_edges:
+        out_edges[v].sort(key=lambda e: e.dst)
+
+    comm.reset(platform)
+    trace = EngineTrace(start={}, finish={}, xfer_start={}, xfer_finish={})
+    events = trace.events
+    arrival: dict[int, float] = {v: 0.0 for v in by_vid}
+    # per-processor serialization state (trivial for injective mappings)
+    proc_busy: dict[int, bool] = {}
+    proc_free_at: dict[int, float] = {}
+    proc_queue: dict[int, list[tuple[float, int]]] = {}
+    finish_heap: list[tuple[float, int]] = []
+
+    def start_block(v: int, t: float) -> None:
+        b = by_vid[v]
+        trace.start[v] = t
+        proc_busy[b.proc] = True
+        heapq.heappush(finish_heap, (t + b.duration, v))
+        if record_events:
+            events.append(SimEvent(time=t, kind="task_start",
+                                   vertex=v, proc=b.proc))
+
+    def on_ready(v: int, t: float) -> None:
+        p = by_vid[v].proc
+        if proc_busy.get(p, False):
+            heapq.heappush(proc_queue.setdefault(p, []), (t, v))
+        else:
+            # an idle processor was freed no later than now, so
+            # ``max(t, free_at)`` is ``t`` except for ready-at-0 ties
+            start_block(v, max(t, proc_free_at.get(p, 0.0)))
+
+    for v in sorted(by_vid):
+        if pending[v] == 0:
+            on_ready(v, 0.0)
+
+    while finish_heap or comm.has_active():
+        nxt = comm.next_completion()
+        # ties: block finishes strictly before transfer completions so
+        # a finishing block's own outgoing transfers join the comm
+        # state before same-instant completions are popped
+        if finish_heap and (nxt is None or finish_heap[0][0] <= nxt[0]):
+            t, v = heapq.heappop(finish_heap)
+            b = by_vid[v]
+            trace.finish[v] = t
+            proc_busy[b.proc] = False
+            proc_free_at[b.proc] = t
+            if record_events:
+                events.append(SimEvent(time=t, kind="task_finish",
+                                       vertex=v, proc=b.proc))
+            for e in out_edges[v]:
+                key = (e.src, e.dst)
+                comm.start(t, key, e.volume, b.proc, by_vid[e.dst].proc)
+                trace.xfer_start[key] = t
+                if record_events:
+                    events.append(SimEvent(time=t, kind="transfer_start",
+                                           edge=key, proc=b.proc))
+            q = proc_queue.get(b.proc)
+            if q:
+                _, w = heapq.heappop(q)
+                start_block(w, t)
+        else:
+            t, key = comm.complete()
+            trace.xfer_finish[key] = t
+            dst = key[1]
+            if record_events:
+                events.append(SimEvent(time=t, kind="transfer_finish",
+                                       edge=key, proc=by_vid[dst].proc))
+            if t > arrival[dst]:
+                arrival[dst] = t
+            pending[dst] -= 1
+            if pending[dst] == 0:
+                on_ready(dst, arrival[dst])
+
+    if len(trace.finish) != len(blocks):
+        raise ValueError(
+            f"{len(blocks) - len(trace.finish)} blocks never became "
+            "ready — the block graph is cyclic"
+        )
+    trace.horizon = max(trace.finish.values(), default=0.0)
+    return trace

@@ -1,0 +1,83 @@
+"""Round-trip tests for the WfCommons-flavored Workflow serialization."""
+import json
+
+import pytest
+
+from repro.core import FAMILIES, generate_workflow, real_like_workflows
+from repro.core.workflows import SCHEMA_VERSION, from_json, to_json
+
+
+def assert_same_workflow(a, b):
+    assert b.name == a.name
+    assert b.n == a.n
+    assert b.labels == a.labels
+    assert b.work == a.work
+    assert b.mem == a.mem
+    assert b.persistent == a.persistent
+    assert b.succ == a.succ
+    assert b.pred == a.pred
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_family_round_trip(family):
+    wf = generate_workflow(family, 120, seed=3)
+    assert_same_workflow(wf, from_json(to_json(wf)))
+
+
+def test_real_like_round_trip_is_fixed_point():
+    for wf in real_like_workflows():
+        s = to_json(wf)
+        assert to_json(from_json(s)) == s  # byte-identical fixed point
+
+
+def test_persistent_weights_survive():
+    wf = generate_workflow("montage", 40, seed=1)
+    wf.persistent[3] = 123.5
+    back = from_json(to_json(wf))
+    assert back.persistent[3] == 123.5
+    assert_same_workflow(wf, back)
+
+
+def test_schema_shape():
+    wf = generate_workflow("blast", 20, seed=0)
+    doc = json.loads(to_json(wf, indent=2))
+    assert doc["schemaVersion"] == SCHEMA_VERSION
+    spec = doc["workflow"]["specification"]
+    assert len(spec["tasks"]) == wf.n
+    assert len(spec["files"]) == wf.n_edges
+    t0 = spec["tasks"][0]
+    assert set(t0) == {"id", "name", "parents", "children"}
+    f0 = spec["files"][0]
+    assert set(f0) == {"id", "size", "source", "target"}
+    # edges carry their weights through files, parents/children agree
+    by_id = {t["id"]: t for t in spec["tasks"]}
+    for f in spec["files"]:
+        assert f["target"] in by_id[f["source"]]["children"]
+        assert f["source"] in by_id[f["target"]]["parents"]
+
+
+def test_execution_entries_optional():
+    doc = {
+        "name": "tiny",
+        "schemaVersion": SCHEMA_VERSION,
+        "workflow": {
+            "specification": {
+                "tasks": [
+                    {"id": "a", "name": "first", "parents": [],
+                     "children": ["b"]},
+                    {"id": "b", "name": "second", "parents": ["a"],
+                     "children": []},
+                ],
+                "files": [{"id": "a->b", "size": 3.5, "source": "a",
+                           "target": "b"}],
+            },
+            "execution": {"tasks": [{"id": "b", "work": 7.0}]},
+        },
+    }
+    wf = from_json(json.dumps(doc))
+    assert wf.n == 2
+    assert wf.labels == ["first", "second"]
+    assert wf.succ[0] == {1: 3.5}
+    assert wf.work == [1.0, 7.0]     # add_task default, then override
+    assert wf.mem == [1.0, 1.0]
+    assert wf.persistent == [0.0, 0.0]
