@@ -1,7 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: verify test fast bench bench-large bench-sweep bench-sim
+.PHONY: verify test fast bench bench-large bench-sweep bench-sim \
+	bench-scenario
 
 # tier-1 verification (ROADMAP.md)
 verify:
@@ -32,3 +33,8 @@ bench-sweep:
 # analytic-vs-simulated gap (contention + jitter) -> BENCH_runtime.json
 bench-sim:
 	python -m benchmarks.bench_sim
+
+# mid-trace failure sweep: cold-vs-warm replan latency + makespan
+# degradation vs failure time -> BENCH_runtime.json ("scenario")
+bench-scenario:
+	python -m benchmarks.bench_scenario

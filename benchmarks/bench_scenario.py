@@ -1,0 +1,128 @@
+"""Mid-trace failure sweep: replan latency + makespan degradation
+(``make bench-scenario``).
+
+For every n=1000 family, plan once, then inject a processor-failure
+event at several points of the simulated execution (fractions of the
+no-failure makespan) and replay the scenario under each replan policy:
+
+* **cold** (``full-replan``) — reschedule the residual from scratch
+  (full k' sweep): the quality ceiling and the latency worst case;
+* **warm** (``pinned-warm-start``) — ``Scheduler.resume`` with the
+  inherited partition and pinned in-flight blocks: what warm-starting
+  buys is exactly ``replan_cold_s / replan_warm_s`` at what makespan
+  premium ``warm_ms / cold_ms``;
+* **none** (``no-replan``) — keep the plan; infeasible whenever the
+  failed processors were in use (recorded as such).
+
+Failed processors are the fastest ones in use by the initial plan —
+the adversarial choice.  Results land under the ``"scenario"`` key of
+``BENCH_runtime.json`` with platform context, tracked across PRs.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+from repro.core import default_cluster, schedule
+from repro.core.scheduler import SchedulerConfig
+from repro.scenario import ProcFailure, Scenario, run_scenario
+
+from .bench_runtime import _load_results, _write_results
+from .common import KPRIME, emit, geomean, workflow_suite
+
+FAIL_FRACS = (0.1, 0.5, 0.9)
+N_FAIL = 4
+
+
+def run(n: int = 1000, seeds=(1,), *, fracs=FAIL_FRACS,
+        n_fail: int = N_FAIL, write_json: bool = True) -> dict:
+    plat = default_cluster()
+    results = _load_results()
+    tier_out = results.setdefault("scenario", {})
+    rows: list[dict] = []
+
+    def snapshot() -> None:
+        """Per-family checkpoint: a partial run leaves usable data."""
+        warm_speedups = [r["replan_speedup"] for r in rows
+                         if r.get("replan_speedup")]
+        warm_premiums = [r["warm_vs_cold_ms"] for r in rows
+                         if r.get("warm_vs_cold_ms")]
+        tier_out[f"n={n}"] = {
+            "platform": plat.name,
+            "beta": plat.bandwidth,
+            "kprime": list(KPRIME),
+            "fail_fracs": list(fracs),
+            "n_fail": n_fail,
+            "cpus": os.cpu_count(),
+            "rows": rows,
+            "replan_speedup_geomean": geomean(warm_speedups),
+            "warm_vs_cold_ms_geomean": geomean(warm_premiums),
+        }
+        if write_json:
+            _write_results(results)
+
+    cfg = SchedulerConfig(kprime=KPRIME)
+    for family, _, seed, wf in workflow_suite(plat, (n,), seeds):
+        base = schedule(wf, plat, kprime=KPRIME)
+        if not base.feasible:
+            rows.append({"family": family, "seed": seed,
+                         "infeasible": base.infeasibility.reason})
+            snapshot()
+            continue
+        ms0 = base.makespan
+        q = base.best.quotient
+        used = sorted({q.proc[v] for v in q.members},
+                      key=lambda j: -plat.speed(j))
+        failed = frozenset(used[:n_fail])
+        for frac in fracs:
+            te = frac * ms0
+            sc = Scenario(wf, plat, [ProcFailure(te, failed)],
+                          name=f"{family}-fail@{frac}")
+            row = {"family": family, "seed": seed, "fail_frac": frac,
+                   "base_ms": ms0, "failed": sorted(failed)}
+            per_policy: dict[str, dict] = {}
+            for label, policy in (("cold", "full-replan"),
+                                  ("warm", "pinned-warm-start"),
+                                  ("none", "no-replan")):
+                t0 = time.perf_counter()
+                tl = run_scenario(sc, policy, config=cfg,
+                                  initial_report=base)
+                wall = time.perf_counter() - t0
+                per_policy[label] = {
+                    "feasible": tl.feasible,
+                    "makespan": tl.makespan,
+                    "degradation": (tl.makespan / ms0
+                                    if tl.makespan else None),
+                    "replan_s": (tl.replan_times_s[0]
+                                 if tl.replan_times_s else None),
+                    "wall_s": wall,
+                }
+            row["policies"] = per_policy
+            cold, warm = per_policy["cold"], per_policy["warm"]
+            if cold["replan_s"] and warm["replan_s"]:
+                row["replan_speedup"] = cold["replan_s"] / warm["replan_s"]
+            if cold["makespan"] and warm["makespan"]:
+                row["warm_vs_cold_ms"] = warm["makespan"] / cold["makespan"]
+            rows.append(row)
+            emit(f"scenario/n={n}/{family}/f={frac}/replan_speedup",
+                 row.get("replan_speedup", float("nan")),
+                 "cold_s_over_warm_s")
+            emit(f"scenario/n={n}/{family}/f={frac}/warm_vs_cold_ms",
+                 row.get("warm_vs_cold_ms", float("nan")),
+                 "stitched_makespan_ratio")
+            snapshot()
+    out = tier_out.get(f"n={n}", {})
+    emit(f"scenario/n={n}/replan_speedup_geomean",
+         out.get("replan_speedup_geomean", float("nan")),
+         "warm_start_latency_win")
+    emit(f"scenario/n={n}/warm_vs_cold_ms_geomean",
+         out.get("warm_vs_cold_ms_geomean", float("nan")),
+         "warm_start_quality_cost")
+    return out
+
+
+if __name__ == "__main__":
+    n = int(sys.argv[sys.argv.index("--n") + 1]) if "--n" in sys.argv \
+        else 1000
+    run(n=n)

@@ -1,9 +1,12 @@
-"""Elastic serving: node failure → scheduler re-plan → serve on.
+"""Elastic serving: mid-trace node failure → warm-start replan → serve on.
 
 Simulates losing 8 chips of a 64-chip mixed fleet serving
-mixtral-8x7b at 32k context, re-plans placement with the paper's
-heuristic, and reports the migration. Then demonstrates the actual
-serving path (greedy decode) on a reduced config.
+mixtral-8x7b at 32k context *mid-execution* — the failure strikes
+partway through the simulated schedule, completed work is frozen,
+in-flight work is pinned in place, and only the residual is replanned
+(`repro.scenario` through `rescale_plan`).  Prints the stitched Gantt
+with the event marker and the migration summary, then demonstrates the
+actual serving path (greedy decode) on a reduced config.
 
 Run:  PYTHONPATH=src python examples/elastic_serving.py
 """
@@ -18,20 +21,45 @@ from repro.runtime import rescale_plan
 
 
 def part1_replan():
-    print("=== elastic re-planning after chip loss ===")
+    print("=== elastic re-planning after mid-trace chip loss ===")
     cfg = get_config("mixtral_8x7b")
     fleet = tpu_fleet_si({"v5e": 48, "v4": 16})
+
+    # probe the healthy step time to place the failure mid-step
+    from repro.core.autoshard import plan
+    healthy = plan(cfg, shape_by_name("decode_32k"), fleet,
+                   kprime=[8, 16, 32, 56])
+    if healthy is None:
+        print("infeasible before failure")
+        return
+    t_fail = 0.5 * healthy.est_step_s
+
     report = rescale_plan(cfg, shape_by_name("decode_32k"), fleet,
-                          failed=set(range(8)),
+                          failed=set(range(8)), at=t_fail,
+                          policy="pinned-warm-start",
                           kprime=[8, 16, 32, 56])
-    print(f"fleet: 64 chips -> lost 8")
+    tl = report.timeline
+    print(f"fleet: 64 chips -> lost 8 at t={t_fail * 1e3:.2f} ms "
+          f"(mid-step)")
     print(f"est step before: {report.est_step_before_s * 1e3:.2f} ms")
     if report.feasible:
         print(f"est step after:  {report.est_step_after_s * 1e3:.2f} ms")
-        print(f"tasks remapped:  {report.moved_tasks}")
+        print(f"stitched finish: {tl.makespan * 1e3:.2f} ms")
         print(f"new plan valid:  {report.new_plan.valid}")
+        m = tl.migrations[0]
+        print(f"migration: {m.moved_tasks} moved, "
+              f"{m.displaced_tasks} displaced (lost chips), "
+              f"{m.restarted_tasks} in-flight restarted "
+              f"(lost work {m.lost_work:.3g} ops)")
+        for frm, to, n in m.moves[:6]:
+            print(f"    {n:4d} task(s)  {frm} -> {to}")
+        if len(m.moves) > 6:
+            print(f"    ... {len(m.moves) - 6} more routes")
+        print()
+        print(tl.gantt(width=64))
     else:
         print("infeasible on survivors -> needs a bigger fleet")
+        print("diagnosis:", report.infeasibility)
     print()
 
 

@@ -72,6 +72,47 @@ honoured by the simulator while the analytic formula keeps the uniform
 via :func:`repro.core.workflows.to_json` / ``from_json`` (a
 WfCommons-flavored schema) so instances and traces can be saved,
 reloaded and swapped for real dumps later.
+
+Scenarios & replanning
+----------------------
+:mod:`repro.scenario` turns the static platform into a timeline: a
+``Scenario`` is a workflow + platform + ordered ``PlatformEvent`` list
+(``ProcFailure`` / ``ProcArrival`` / ``SpeedChange`` /
+``LinkDegrade``), and ``run_scenario(scenario, policy)`` executes it —
+simulate, pause the engine at each event (``run_engine(...,
+stop_time=t)``), freeze the completed prefix, extract the residual DAG
+(:func:`repro.core.workflows.residual_workflow`: frontier tasks become
+sources, already-materialized boundary inputs fold into task memory so
+``r_u`` is preserved), replan, stitch — returning a ``TimelineReport``
+(end-to-end makespan, per-segment reports, migration log, Gantt with
+event markers).
+
+The scheduler side is :meth:`Scheduler.resume`: a **warm-start mode**
+fed by a :class:`~repro.core.scheduler.ResumeState` (residual workflow
++ inherited partition + per-block processor, ``None`` where the
+processor disappeared + pinned in-flight blocks).  The ``warm_start``
+pipeline inherits the partition instead of re-running Steps 1–2, Step
+3 re-homes orphaned blocks, and the Step-4 stages are *pin-aware*:
+they never move a pinned block.  Replan policies are pluggable —
+``pinned-warm-start`` (cheap), ``full-replan`` (cold, the quality
+ceiling), ``no-replan`` (the do-nothing baseline) — and ``make
+bench-scenario`` quantifies what warm-starting buys (replan latency,
+makespan degradation vs failure time).
+
+Platform events compose the elastic transforms :meth:`Platform.without`
+∘ :meth:`Platform.with_speed` ∘ :meth:`Platform.with_link_bandwidth` ∘
+:meth:`Platform.with_processors` — link overrides survive failures and
+reindexing (property-tested in ``tests/test_platform_transforms.py``).
+
+**Migration notes:** ``repro.runtime.elastic.rescale_plan`` is now a
+one-event scenario: it never raises on infeasibility (structured
+``Infeasibility`` on ``report.infeasibility``), returns a
+``TimelineReport``-backed ``RescaleReport`` (``report.timeline``), and
+takes ``at=`` (failure time on the execution clock) and ``policy=``
+(``"full-replan"`` keeps the old cold-replan behaviour and default).
+``StragglerMonitor.degraded_platform`` is now built from
+``StragglerMonitor.speed_events`` — ``SpeedChange`` events consumable
+by ``repro.scenario`` directly.
 """
 from .dag import QuotientGraph, Workflow, build_quotient
 from .platform import (
@@ -101,6 +142,7 @@ from .heuristic import dag_het_part, kprime_sweep_values
 from .scheduler import (
     Infeasibility,
     MappingSummary,
+    ResumeState,
     ScheduleReport,
     Scheduler,
     SchedulerConfig,
@@ -113,6 +155,7 @@ from .workflows import (
     generate_workflow,
     random_layered_dag,
     real_like_workflows,
+    residual_workflow,
 )
 
 __all__ = [
@@ -128,8 +171,8 @@ __all__ = [
     "acyclic_partition", "edge_cut", "partition_block",
     "MappingResult", "dag_het_mem", "dag_het_part", "validate_mapping",
     "Scheduler", "SchedulerConfig", "ScheduleReport", "SweepPoint",
-    "Infeasibility", "MappingSummary", "Stage", "schedule",
+    "Infeasibility", "MappingSummary", "ResumeState", "Stage", "schedule",
     "kprime_sweep_values",
     "FAMILIES", "generate_workflow", "real_like_workflows",
-    "random_layered_dag",
+    "random_layered_dag", "residual_workflow",
 ]

@@ -30,7 +30,14 @@ from .modelgraph import TaskInfo, build_model_graph
 from .platform import Platform
 from .scheduler import ScheduleReport, Scheduler, SchedulerConfig
 
-__all__ = ["PartitionPlan", "plan"]
+__all__ = ["PartitionPlan", "default_microbatches", "plan"]
+
+
+def default_microbatches(shape: ShapeConfig) -> int:
+    """The planning default: 8 for training shapes (pipelined working
+    set), 1 otherwise.  Shared with :func:`repro.runtime.elastic.
+    rescale_plan` so pre/post-failure plans lower the same DAG."""
+    return 8 if shape.kind == "train" else 1
 
 
 @dataclass
@@ -68,7 +75,7 @@ def plan(cfg: ModelConfig, shape: ShapeConfig, platform: Platform,
     otherwise.
     """
     if microbatches is None:
-        microbatches = 8 if shape.kind == "train" else 1
+        microbatches = default_microbatches(shape)
     wf, info = build_model_graph(cfg, shape, microbatches=microbatches)
     report = Scheduler(SchedulerConfig(
         algorithm=algo, kprime=kprime, workers=workers,

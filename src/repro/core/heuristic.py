@@ -312,6 +312,7 @@ def _find_ms_opt_merge(
     ev: IncrementalEvaluator,
     platform: Platform,
     reqs: _Requirements,
+    pinned: frozenset[int] | set[int] = frozenset(),
 ) -> tuple[float, int | None, int | None]:
     """Algorithm 3: best merge of unassigned ``v`` into a candidate.
 
@@ -325,6 +326,11 @@ def _find_ms_opt_merge(
     the composition bounds of :class:`_Requirements` and only falls
     back to the full min-peak traversal search when the bounds are
     inconclusive (or for triple merges, whose parts interleave).
+
+    ``pinned`` blocks (warm-start mode: in-flight on their processor)
+    may *absorb* ``v`` — the merged block keeps their processor — but a
+    triple merge whose third partner is pinned is rejected: absorbing
+    the third would strip it of its own processor, i.e. move it.
     """
     q = ev.q
     best_ms = float("inf")
@@ -353,6 +359,8 @@ def _find_ms_opt_merge(
             # returns the smallest common neighbour): reject by the
             # requirement lower bound before any structural work
             other = min(two_cycle)
+            if other in pinned:
+                continue  # absorbing a pinned block would move it
             e_other = reqs.entry(q, other)
             if max(e_v[0], e_vp[0], e_other[0]) > cap:
                 continue
@@ -398,6 +406,9 @@ def _find_ms_opt_merge(
             ev.rollback()
             continue
         third = cycle[0] if cycle[0] != vm else cycle[1]
+        if third in pinned:
+            ev.rollback()
+            continue
         vm, cycle = ev.merge(vm, third)
         if cycle is not None:
             ev.rollback()
@@ -419,6 +430,7 @@ def _merge_unassigned(
     q: QuotientGraph,
     reqs: _Requirements,
     ev: IncrementalEvaluator,
+    pinned: set[int] | None = None,
 ) -> dict | None:
     """Algorithm 4.  Mutates ``q``; ``None`` on success, else a failure
     record ``{"reason", "gap", "block_size"}`` describing the block that
@@ -438,7 +450,14 @@ def _merge_unassigned(
     into the grown block stay on the O(1) bound fast path.  The
     assigned/busy/path sets are maintained incrementally — per-item
     work is O(deg), not O(V).
+
+    ``pinned`` (warm-start mode) marks assigned blocks whose processor
+    must not change: they may absorb unassigned blocks (the merged
+    block keeps their processor and inherits the pin — ``pinned`` is
+    updated in place), but never lose their own assignment.
     """
+    if pinned is None:
+        pinned = set()
     path = ev.critical_path_set()
     assigned = {v for v in q.vertices() if q.proc[v] is not None}
     busy = {q.proc[a] for a in assigned}
@@ -451,7 +470,7 @@ def _merge_unassigned(
             if w in assigned and w not in path
         )
         ms, partner, third = _find_ms_opt_merge(
-            v, nbrs, ev, platform, reqs)
+            v, nbrs, ev, platform, reqs, pinned)
         if partner is None:
             # off-path candidates are all proven infeasible at this
             # point (a feasible one would have set a partner), so the
@@ -461,7 +480,7 @@ def _merge_unassigned(
                 if w in assigned and w in path
             )
             ms, partner, third = _find_ms_opt_merge(
-                v, nbrs, ev, platform, reqs)
+                v, nbrs, ev, platform, reqs, pinned)
         if partner is None:
             # place-on-idle fallback
             r_v = reqs.of(q, v)
@@ -476,6 +495,7 @@ def _merge_unassigned(
                 continue
         if partner is not None:
             target_proc = q.proc[partner]
+            was_pinned = partner in pinned
             # capture part entries before the merge for witness
             # composition (quotient edges between v/partner run one way)
             first, second = ((v, partner) if partner in q.succ[v]
@@ -499,6 +519,11 @@ def _merge_unassigned(
             ev.set_proc(vm, target_proc)
             reqs.commit_merged(q, vm, compose)
             assigned.add(vm)
+            if was_pinned:
+                # the merged block stays on the pinned processor; the
+                # pin survives so Step 4 never moves it either
+                pinned.discard(partner)
+                pinned.add(vm)
             path = ev.critical_path_set()
         else:
             unresolved_nbrs = any(
@@ -570,6 +595,7 @@ def _swap_pass(
     *,
     exhaustive: bool = False,
     full_scan_fallback: bool = True,
+    pinned: set[int] | None = None,
 ) -> None:
     """Best-improvement swaps, delta-evaluated with rollback.
 
@@ -578,7 +604,10 @@ def _swap_pass(
     O(V²) verification scan runs (``full_scan_fallback``) — cheap now
     that each probe is a delta evaluation instead of a full sweep.
     ``exhaustive=True`` forces full scans throughout (test oracle).
+    ``pinned`` blocks (warm-start mode) never swap.
     """
+    if pinned is None:
+        pinned = frozenset()
     ev.ensure_exact_ranks()
     req_of = reqs.snapshot(q)  # partition is frozen during Step 4
     mem_of = [platform.memory(j) for j in range(platform.k)]
@@ -604,6 +633,8 @@ def _swap_pass(
         else:
             pairs = _swap_candidates(q, platform, ev)
         for v, vp in pairs:
+            if v in pinned or vp in pinned:
+                continue
             pa, pb = q.proc[v], q.proc[vp]
             if pa == pb:
                 continue
@@ -641,12 +672,16 @@ def _idle_moves(
     q: QuotientGraph,
     reqs: _Requirements,
     ev: IncrementalEvaluator,
+    pinned: set[int] | None = None,
 ) -> None:
     """Move critical-path blocks to faster idle processors.
 
     Walks the evaluator's maintained critical path; each probe is a
     transactional reassignment, committed only on improvement.
+    ``pinned`` blocks (warm-start mode) never move.
     """
+    if pinned is None:
+        pinned = frozenset()
     busy = {q.proc[v] for v in q.vertices()}
     idle = [j for j in range(platform.k) if j not in busy]
     if not idle:
@@ -655,7 +690,7 @@ def _idle_moves(
     moved: set[int] = set()
     while True:
         path = ev.critical_path()
-        cand = [v for v in path if v not in moved]
+        cand = [v for v in path if v not in moved and v not in pinned]
         if not cand:
             return
         ms0 = ev.makespan()

@@ -94,6 +94,38 @@ class Platform:
         return Platform(list(self.procs), beta, f"{self.name}@beta={beta}",
                         dict(self.link_bandwidth))
 
+    def with_speed(self, j: int, speed: float) -> "Platform":
+        """Platform with processor ``j``'s speed replaced by ``speed``
+        (name, memory, links and every other processor unchanged).
+
+        The elastic transform behind ``SpeedChange`` events
+        (:mod:`repro.scenario`) and the straggler-mitigation view
+        (:meth:`repro.runtime.fault.StragglerMonitor.degraded_platform`);
+        composes with :meth:`without` / :meth:`with_link_bandwidth`.
+        """
+        if not 0 <= j < self.k:
+            raise ValueError(
+                f"processor {j} out of range for k={self.k}"
+            )
+        if not speed > 0:
+            raise ValueError(
+                f"processor speed must be positive, got {speed!r} for "
+                f"processor {j}"
+            )
+        procs = list(self.procs)
+        procs[j] = replace(procs[j], speed=float(speed))
+        return Platform(procs, self.bandwidth, self.name,
+                        dict(self.link_bandwidth))
+
+    def with_processors(self, procs: list["Processor"]) -> "Platform":
+        """Platform with ``procs`` appended (elastic scale-up).
+
+        New processors take the next indices, so existing per-link
+        overrides (and any external index references) stay valid.
+        """
+        return Platform(list(self.procs) + list(procs), self.bandwidth,
+                        self.name, dict(self.link_bandwidth))
+
     def with_link_bandwidth(self, i: int, j: int, beta: float, *,
                             symmetric: bool = True) -> "Platform":
         """Platform with link ``i → j`` (and ``j → i`` when

@@ -63,6 +63,7 @@ __all__ = [
     "Infeasibility",
     "MappingSummary",
     "PIPELINES",
+    "ResumeState",
     "ScheduleReport",
     "Scheduler",
     "SchedulerConfig",
@@ -276,6 +277,42 @@ class StageFailure:
 
 
 @dataclass
+class ResumeState:
+    """Warm-start input for :meth:`Scheduler.resume` — a partially
+    executed plan lifted onto a (possibly changed) platform.
+
+    ``wf`` is the residual workflow (see
+    :func:`repro.core.workflows.residual_workflow`), ``blocks`` its
+    partition inherited from the previous plan (residual task ids,
+    grouped by surviving block), ``proc_of_block[b]`` the block's
+    processor on ``platform`` — ``None`` where the old processor no
+    longer exists (the block re-enters Step 3 as unassigned) — and
+    ``pinned`` the indices of blocks that must stay on their processor
+    (in-flight at the replanning point: warm-start never migrates
+    them).  :mod:`repro.scenario` constructs these from a paused
+    simulation; hand-built states just need the same shape.
+    """
+
+    wf: Workflow
+    platform: Platform
+    blocks: list[list[int]]
+    proc_of_block: list[int | None]
+    pinned: set[int] = field(default_factory=set)
+
+    def __post_init__(self) -> None:
+        if len(self.blocks) != len(self.proc_of_block):
+            raise ValueError("blocks / proc_of_block length mismatch")
+        bad = [b for b in self.pinned
+               if not 0 <= b < len(self.blocks)
+               or self.proc_of_block[b] is None]
+        if bad:
+            raise ValueError(
+                f"pinned block(s) {sorted(bad)[:5]} unassigned or out "
+                "of range — a pin needs a surviving processor"
+            )
+
+
+@dataclass
 class StageContext:
     """Mutable state threaded through one pipeline run (one k')."""
 
@@ -291,6 +328,8 @@ class StageContext:
     result: MappingResult | None = None
     failure: StageFailure | None = None
     sim_options: dict | None = None         # simulate-stage kwargs
+    resume: ResumeState | None = None       # warm_start-stage input
+    pinned: set[int] = field(default_factory=set)  # vids frozen in place
 
 
 @runtime_checkable
@@ -369,14 +408,15 @@ class AssignStage:
 
 
 class MergeStage:
-    """Step 3: merge unassigned blocks into assigned ones."""
+    """Step 3: merge unassigned blocks into assigned ones (never moving
+    pinned blocks in warm-start runs)."""
 
     name = "merge"
     toggle = None
 
     def run(self, ctx: StageContext) -> None:
         fail = _merge_unassigned(ctx.wf, ctx.platform, ctx.q,
-                                 ctx.reqs, ctx.ev)
+                                 ctx.reqs, ctx.ev, ctx.pinned)
         if fail is not None:
             ctx.failure = StageFailure(
                 self.name,
@@ -386,23 +426,95 @@ class MergeStage:
 
 
 class SwapStage:
-    """Step 4a: best-improvement block swaps."""
+    """Step 4a: best-improvement block swaps (pinned blocks excluded)."""
 
     name = "swap"
     toggle = "swap"
 
     def run(self, ctx: StageContext) -> None:
-        _swap_pass(ctx.wf, ctx.platform, ctx.q, ctx.reqs, ctx.ev)
+        _swap_pass(ctx.wf, ctx.platform, ctx.q, ctx.reqs, ctx.ev,
+                   pinned=ctx.pinned)
 
 
 class IdleMoveStage:
-    """Step 4b: move critical-path blocks to faster idle processors."""
+    """Step 4b: move critical-path blocks to faster idle processors
+    (pinned blocks excluded)."""
 
     name = "idle_moves"
     toggle = "idle_moves"
 
     def run(self, ctx: StageContext) -> None:
-        _idle_moves(ctx.wf, ctx.platform, ctx.q, ctx.reqs, ctx.ev)
+        _idle_moves(ctx.wf, ctx.platform, ctx.q, ctx.reqs, ctx.ev,
+                    ctx.pinned)
+
+
+class WarmStartStage:
+    """Warm start: rebuild the quotient from a :class:`ResumeState`
+    instead of partitioning from scratch.
+
+    Replaces Steps 1–2 in the ``warm_start`` pipeline: the inherited
+    partition becomes the quotient, surviving assignments are kept
+    (re-checked against their processor's memory), blocks whose
+    processor disappeared re-enter Step 3 as unassigned, and pinned
+    blocks are marked so merge/swap/idle_moves never move them.
+    """
+
+    name = "warm_start"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        state = ctx.resume
+        if state is None:
+            raise ValueError(
+                "warm_start stage needs a ResumeState "
+                "(use Scheduler.resume)"
+            )
+        wf, platform = ctx.wf, ctx.platform
+        block_of: list[int] = [-1] * wf.n
+        for b, nodes in enumerate(state.blocks):
+            for u in nodes:
+                block_of[u] = b
+        if any(b < 0 for b in block_of):
+            missing = block_of.count(-1)
+            raise ValueError(
+                f"{missing} residual task(s) not covered by any "
+                "ResumeState block"
+            )
+        q = build_quotient(wf, block_of)
+        procs_seen: dict[int, int] = {}
+        for vid, members in q.members.items():
+            b = block_of[next(iter(members))]
+            pj = state.proc_of_block[b]
+            if pj is not None and pj in procs_seen:
+                raise ValueError(
+                    f"processor {pj} assigned to blocks "
+                    f"{procs_seen[pj]} and {b}"
+                )
+            if pj is not None:
+                procs_seen[pj] = b
+            q.proc[vid] = pj
+            if b in state.pinned:
+                ctx.pinned.add(vid)
+        ctx.q = q
+        ctx.reqs = _Requirements(wf, ctx.exact_limit, sweep_memo=ctx.memo)
+        ctx.ev = IncrementalEvaluator(q, platform)
+        # Re-certify kept assignments: platform events never shrink a
+        # surviving processor's memory today, but hand-built states (or
+        # future event kinds) may — fail structurally, not downstream.
+        for vid in sorted(q.members):
+            pj = q.proc[vid]
+            if pj is None:
+                continue
+            r = ctx.reqs.of(q, vid)
+            cap = platform.memory(pj)
+            if r > cap * (1 + 1e-9):
+                ctx.failure = StageFailure(
+                    self.name,
+                    f"inherited block {vid} (requirement {r:.4g}) no "
+                    f"longer fits processor {pj} ({cap:.4g})",
+                    r - cap,
+                )
+                return
 
 
 class PackStage:
@@ -423,12 +535,22 @@ class PackStage:
 def _materialize_result(ctx: StageContext, kp: int | None) -> None:
     """Lift a successful heuristic run's evaluator state into a
     :class:`MappingResult` (idempotent; ``pack`` sets ``ctx.result``
-    itself)."""
+    itself).  A quotient with unassigned blocks — possible when a
+    pipeline omits the merge stage, e.g. the no-replan baseline on a
+    failure event — is a structured failure, never an invalid result."""
     if ctx.result is not None or ctx.failure is not None or ctx.ev is None:
+        return
+    unassigned = sum(1 for v in ctx.q.members if ctx.q.proc[v] is None)
+    if unassigned:
+        ctx.failure = StageFailure(
+            "materialize",
+            f"{unassigned} block(s) left unassigned by the pipeline",
+            None,
+        )
         return
     ms = ctx.ev.makespan()
     ctx.result = MappingResult(
-        algo="DagHetPart",
+        algo="DagHetPart-warm" if ctx.resume is not None else "DagHetPart",
         quotient=ctx.q,
         platform=ctx.platform,
         makespan=ms,
@@ -497,12 +619,16 @@ def register_pipeline(algorithm: str, stage_names: Sequence[str]) -> None:
 
 for _stage in (PartitionStage(), AssignStage(), MergeStage(),
                SwapStage(), IdleMoveStage(), PackStage(),
-               SimulateStage()):
+               SimulateStage(), WarmStartStage()):
     register_stage(_stage)
 register_pipeline("dag_het_part",
                   ("partition", "assign", "merge", "swap", "idle_moves",
                    "simulate"))
 register_pipeline("dag_het_mem", ("pack", "simulate"))
+# Scheduler.resume: inherit the partition, repair, refine.
+register_pipeline("warm_start",
+                  ("warm_start", "merge", "swap", "idle_moves",
+                   "simulate"))
 
 
 # ---------------------------------------------------------------------- #
@@ -565,11 +691,12 @@ def _execute_pipeline(
     spec: _RunSpec,
     kp: int | None,
     memo: dict,
+    resume: "ResumeState | None" = None,
 ) -> tuple[MappingResult | None, SweepPoint]:
     t_run = time.perf_counter()
     ctx = StageContext(wf=wf, platform=platform, k_prime=kp,
                        exact_limit=spec.exact_limit, memo=memo,
-                       sim_options=spec.sim_options)
+                       sim_options=spec.sim_options, resume=resume)
     stage_times: dict[str, float] = {}
     for name in spec.stage_names:
         stage = get_stage(name)
@@ -685,6 +812,17 @@ class Scheduler:
         self.config = cfg
 
     # -------------------------------------------------------------- #
+    def _filter_toggles(self, names: Sequence[str]) -> tuple[str, ...]:
+        cfg = self.config
+        out = []
+        for n in names:
+            stage = get_stage(n)
+            toggle = getattr(stage, "toggle", None)
+            if toggle is not None and not getattr(cfg, toggle):
+                continue
+            out.append(n)
+        return tuple(out)
+
     def stage_names(self) -> tuple[str, ...]:
         """The resolved, toggle-filtered pipeline for this config."""
         cfg = self.config
@@ -698,14 +836,7 @@ class Scheduler:
                     f"unknown algorithm {cfg.algorithm!r}; registered "
                     f"pipelines: {sorted(PIPELINES)}"
                 ) from None
-        out = []
-        for n in names:
-            stage = get_stage(n)
-            toggle = getattr(stage, "toggle", None)
-            if toggle is not None and not getattr(cfg, toggle):
-                continue
-            out.append(n)
-        return tuple(out)
+        return self._filter_toggles(names)
 
     def sweep_values(self, wf: Workflow,
                      platform: Platform) -> list[int | None]:
@@ -821,8 +952,52 @@ class Scheduler:
     __call__ = schedule
 
     # -------------------------------------------------------------- #
+    def resume(self, state: ResumeState) -> ScheduleReport:
+        """Warm-start replan from a partially executed plan.
+
+        Runs the ``warm_start`` pipeline (inherit the partition from
+        ``state``, merge orphaned blocks, pin-aware Step-4 refinement;
+        ``config.stages`` overrides the stage list, ``swap`` /
+        ``idle_moves`` / ``simulate`` toggles apply) on the residual
+        workflow.  No k' sweep: the partition already exists — that is
+        what warm-starting buys over :meth:`schedule`.  Always returns
+        a :class:`ScheduleReport` (``algorithm="warm_start"``); pinned
+        blocks keep their processor in any feasible result.
+        """
+        cfg = self.config
+        t0 = time.perf_counter()
+        names = self._filter_toggles(
+            cfg.stages if cfg.stages is not None
+            else PIPELINES["warm_start"])
+        spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options)
+        res, point = _execute_pipeline(state.wf, state.platform, spec,
+                                       None, {}, resume=state)
+        for cb in ([_default_printer] if cfg.verbose else []) + (
+                [cfg.on_sweep_result] if cfg.on_sweep_result else []):
+            cb(point)
+        total = time.perf_counter() - t0
+        if res is not None:
+            res.runtime_s = total
+            summary = MappingSummary.from_result(res)
+            infeas = None
+        else:
+            summary = None
+            infeas = self._diagnose(names, [point], algorithm="warm_start")
+        return ScheduleReport(
+            algorithm="warm_start",
+            summary=summary,
+            infeasibility=infeas,
+            sweep=[point],
+            stage_times=dict(point.stage_times),
+            total_time_s=total,
+            workers=1,
+            best=res,
+        )
+
+    # -------------------------------------------------------------- #
     def _diagnose(self, stage_names: tuple[str, ...],
-                  points: list[SweepPoint]) -> Infeasibility:
+                  points: list[SweepPoint],
+                  algorithm: str | None = None) -> Infeasibility:
         order = {name: i for i, name in enumerate(stage_names)}
         furthest = max(points,
                        key=lambda p: order.get(p.failed_stage, -1))
@@ -830,7 +1005,7 @@ class Scheduler:
                 if p.memory_gap is not None and p.memory_gap > 0]
         kps = [p.k_prime for p in points if p.k_prime is not None]
         return Infeasibility(
-            algorithm=self.config.algorithm,
+            algorithm=algorithm or self.config.algorithm,
             stage=furthest.failed_stage or "?",
             reason=furthest.fail_reason or "no sweep value succeeded",
             tightest_gap=min(gaps) if gaps else None,

@@ -26,6 +26,7 @@ __all__ = [
     "SCHEMA_VERSION",
     "generate_workflow",
     "random_weights",
+    "residual_workflow",
     "scale_memory_to_platform",
     "real_like_workflows",
     "random_layered_dag",
@@ -358,6 +359,47 @@ def random_layered_dag(
         wf.work[u] = float(rng.uniform(1, 1000))
         wf.mem[u] = float(rng.uniform(1, 192))
     return wf
+
+
+# ---------------------------------------------------------------------- #
+# residual extraction: mid-trace replanning (repro.scenario)
+# ---------------------------------------------------------------------- #
+def residual_workflow(
+    wf: Workflow, completed: set[int]
+) -> tuple[Workflow, list[int]]:
+    """The workflow left to execute after ``completed`` tasks finished.
+
+    Returns ``(residual, mapping)`` where ``mapping[i]`` is the
+    original id of residual task ``i``.  ``completed`` must be closed
+    under predecessors (a task cannot finish before its inputs exist) —
+    exactly the invariant a simulated execution prefix satisfies.
+
+    Frontier handling: tasks whose predecessors all completed become
+    *sources* of the residual DAG.  Each file a completed producer
+    feeds across the boundary is already materialized, so its transfer
+    is not re-priced; its volume is folded into the consumer's task
+    memory instead, which keeps the residual task requirement ``r_u``
+    (inputs + outputs + task memory) identical to the original.  Moving
+    such a consumer to another processor would in reality re-transfer
+    the file — :mod:`repro.scenario` reports those moves in its
+    migration log, and pricing them is the checkpoint-cost-aware
+    follow-on (ROADMAP).
+    """
+    bad = [u for u in completed
+           if any(p not in completed for p in wf.pred[u])]
+    if bad:
+        raise ValueError(
+            f"completed set not closed under predecessors (e.g. task "
+            f"{bad[0]} completed before some of its inputs)"
+        )
+    remaining = [u for u in range(wf.n) if u not in completed]
+    sub, mapping = wf.subgraph(remaining)
+    sub.name = f"{wf.name}-residual"
+    for i, u in enumerate(mapping):
+        ext = sum(c for p, c in wf.pred[u].items() if p in completed)
+        if ext:
+            sub.mem[i] += ext
+    return sub, mapping
 
 
 # ---------------------------------------------------------------------- #

@@ -84,32 +84,52 @@ class StragglerMonitor:
         return meds
 
     def stragglers(self) -> list[int]:
+        return sorted(self.slowdown_factors())
+
+    def slowdown_factors(self) -> dict[int, float]:
+        """Per-straggler speed factor ``overall_median / host_median``
+        (< 1/threshold by construction): the fraction of nominal speed
+        a straggling host is actually delivering."""
         meds = self._medians()
         if len(meds) < 2:
-            return []
+            return {}
         overall = sorted(meds.values())[(len(meds) - 1) // 2]
-        return [h for h, m in meds.items() if m > self.threshold * overall]
+        return {
+            h: overall / m
+            for h, m in meds.items()
+            if m > self.threshold * overall
+        }
+
+    def speed_events(self, platform, host_of_proc, *, at: float = 0.0):
+        """The measured slowdowns as :class:`repro.scenario.SpeedChange`
+        events at time ``at`` — the handoff from monitoring to
+        mid-trace replanning (``Scenario(wf, platform, events)``)."""
+        from repro.scenario import SpeedChange
+
+        factors = self.slowdown_factors()
+        return [
+            SpeedChange(time=at, proc=j, factor=factors[host_of_proc(j)])
+            for j in range(platform.k)
+            if host_of_proc(j) in factors
+        ]
 
     def degraded_platform(self, platform, host_of_proc):
         """Platform with straggler processors' speeds scaled by their
-        measured slowdown — input for scheduler re-planning."""
-        from repro.core.platform import Platform, Processor
+        measured slowdown — input for scheduler re-planning.
 
-        meds = self._medians()
-        if not meds:
+        Built by applying :meth:`speed_events`, so it is exactly the
+        platform a :class:`repro.scenario.Scenario` carrying those
+        events would replan on (per-link bandwidth overrides included —
+        the old hand-rolled rebuild dropped them).
+        """
+        events = self.speed_events(platform, host_of_proc)
+        if not events:
             return platform
-        overall = sorted(meds.values())[(len(meds) - 1) // 2]
-        procs = []
-        for j, p in enumerate(platform.procs):
-            host = host_of_proc(j)
-            m = meds.get(host)
-            if m is not None and m > self.threshold * overall:
-                procs.append(Processor(p.name + "*slow",
-                                       p.speed * overall / m, p.memory))
-            else:
-                procs.append(p)
-        return Platform(procs, platform.bandwidth,
-                        platform.name + "-degraded")
+        out = platform
+        for ev in events:
+            out, _ = ev.apply(out)
+        out.name = platform.name + "-degraded"
+        return out
 
 
 class StepTimer:

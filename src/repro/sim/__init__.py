@@ -41,7 +41,14 @@ from repro.core.makespan import makespan as _analytic_makespan
 from repro.core.platform import Platform
 
 from .comm import ContentionFreeComm, FairShareComm, resolve_comm
-from .engine import BlockSpec, EdgeSpec, run_engine, transpose_edges
+from .engine import (
+    BlockSpec,
+    EdgeSpec,
+    EngineCheckpoint,
+    resume_engine,
+    run_engine,
+    transpose_edges,
+)
 from .memory import build_memory_trace, pick_block_order
 from .perturb import JitterSpec
 from .report import (
@@ -57,6 +64,7 @@ from .report import (
 __all__ = [
     "BlockSpec",
     "EdgeSpec",
+    "EngineCheckpoint",
     "ContentionFreeComm",
     "FairShareComm",
     "JitterEnvelope",
@@ -68,7 +76,9 @@ __all__ = [
     "SimReport",
     "TransferRecord",
     "build_memory_trace",
+    "build_specs",
     "resolve_comm",
+    "resume_engine",
     "run_engine",
     "simulate",
     "trace_memory",
@@ -88,8 +98,13 @@ class _ReversedLinkView:
         return self._platform.bandwidth_between(j, i)
 
 
-def _specs(q, platform: Platform):
-    """Deterministic (blocks, edges) for a fully assigned quotient."""
+def build_specs(q, platform: Platform):
+    """Deterministic (blocks, edges) for a fully assigned quotient.
+
+    The lowering :func:`simulate` uses internally, public so drivers
+    (e.g. :mod:`repro.scenario`) can run the engine directly — with a
+    ``stop_time`` pause — on the exact specs a full simulation uses.
+    """
     vids = sorted(q.members)
     blocks = []
     for v in vids:
@@ -147,7 +162,7 @@ def simulate(
         )
     q = res.quotient
     platform = platform if platform is not None else res.platform
-    blocks, edges = _specs(q, platform)
+    blocks, edges = build_specs(q, platform)
     comm_model = resolve_comm(comm)
 
     trace = run_engine(blocks, edges, comm_model, platform,
@@ -245,7 +260,7 @@ def trace_memory(mapping, platform: Platform | None = None,
         raise ValueError("schedule report has no feasible mapping to trace")
     q = res.quotient
     platform = platform if platform is not None else res.platform
-    blocks, edges = _specs(q, platform)
+    blocks, edges = build_specs(q, platform)
     trace = run_engine(blocks, edges, resolve_comm(comm), platform,
                        record_events=False)
     return build_memory_trace(q.wf, q, platform, trace.start, trace.finish,

@@ -18,6 +18,21 @@ Semantics (the paper's execution model, §3.3):
 * every outgoing quotient edge starts transferring the moment its
   source block finishes; the comm model decides when it lands.
 
+Pause / resume
+--------------
+``run_engine(..., stop_time=t)`` pauses the replay *before* processing
+the first event strictly later than ``t``: every block finish and
+transfer completion at or before ``t`` is applied, then the engine
+state is frozen into an :class:`EngineCheckpoint` attached to the
+returned (partial) trace.  :func:`resume_engine` continues a checkpoint
+— possibly pausing again — and an uninterrupted run and any
+pause/resume chain produce **bit-identical** traces (the event order
+never depends on where the pause falls).  This is what
+:mod:`repro.scenario` builds on: pause at a platform event, freeze the
+completed/in-flight prefix, replan the residual.  A checkpoint holds
+the live engine structures (including the comm model) by reference, so
+it is single-use: resuming mutates it in place.
+
 Bit-exactness anchor (CPM duality)
 ----------------------------------
 The analytic makespan (Eq. (2)) folds bottom weights from the sinks::
@@ -44,8 +59,8 @@ from dataclasses import dataclass, field
 
 from .report import SimEvent
 
-__all__ = ["BlockSpec", "EdgeSpec", "EngineTrace", "run_engine",
-           "transpose_edges"]
+__all__ = ["BlockSpec", "EdgeSpec", "EngineCheckpoint", "EngineTrace",
+           "resume_engine", "run_engine", "transpose_edges"]
 
 
 @dataclass(frozen=True)
@@ -68,7 +83,13 @@ class EdgeSpec:
 
 @dataclass
 class EngineTrace:
-    """Raw engine output; :func:`repro.sim.simulate` dresses it up."""
+    """Raw engine output; :func:`repro.sim.simulate` dresses it up.
+
+    ``checkpoint`` is set iff the run paused at a ``stop_time`` with
+    work still outstanding; the trace then covers the executed prefix
+    only (``finish`` holds the completed blocks, ``start`` additionally
+    the in-flight ones).
+    """
 
     start: dict[int, float]
     finish: dict[int, float]
@@ -76,6 +97,37 @@ class EngineTrace:
     xfer_finish: dict[tuple[int, int], float]
     events: list[SimEvent] = field(default_factory=list)
     horizon: float = 0.0
+    checkpoint: "EngineCheckpoint | None" = None
+
+    @property
+    def paused(self) -> bool:
+        return self.checkpoint is not None
+
+    def in_flight(self) -> set[int]:
+        """Blocks started but not finished (empty for completed runs)."""
+        return set(self.start) - set(self.finish)
+
+
+@dataclass
+class EngineCheckpoint:
+    """Frozen mid-replay engine state (see module docstring).
+
+    Opaque to callers: pass it to :func:`resume_engine`.  Holds live
+    references (including the comm model), so it is single-use.
+    """
+
+    time: float
+    by_vid: dict
+    out_edges: dict
+    pending: dict
+    arrival: dict
+    proc_busy: dict
+    proc_free_at: dict
+    proc_queue: dict
+    finish_heap: list
+    comm: object
+    record_events: bool
+    trace: EngineTrace
 
 
 def transpose_edges(edges: list[EdgeSpec]) -> list[EdgeSpec]:
@@ -83,39 +135,21 @@ def transpose_edges(edges: list[EdgeSpec]) -> list[EdgeSpec]:
     return [EdgeSpec(e.dst, e.src, e.volume) for e in edges]
 
 
-def run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
-               platform, *, record_events: bool = True) -> EngineTrace:
-    """Replay ``blocks``/``edges`` under ``comm``; see module docstring.
-
-    Raises ``ValueError`` when the block graph is cyclic (some block
-    can never start).
-    """
-    by_vid = {b.vid: b for b in blocks}
-    if len(by_vid) != len(blocks):
-        raise ValueError("duplicate block vid")
-    out_edges: dict[int, list[EdgeSpec]] = {v: [] for v in by_vid}
-    pending: dict[int, int] = {v: 0 for v in by_vid}
-    seen_edges: set[tuple[int, int]] = set()
-    for e in edges:
-        # (src, dst) keys transfers throughout (quotient edges are
-        # aggregated); duplicates would alias in the comm models
-        if (e.src, e.dst) in seen_edges:
-            raise ValueError(f"duplicate edge {(e.src, e.dst)}")
-        seen_edges.add((e.src, e.dst))
-        out_edges[e.src].append(e)
-        pending[e.dst] += 1
-    for v in out_edges:
-        out_edges[v].sort(key=lambda e: e.dst)
-
-    comm.reset(platform)
-    trace = EngineTrace(start={}, finish={}, xfer_start={}, xfer_finish={})
+def _drive(cp: EngineCheckpoint, stop_time: float | None,
+           initial_ready: list[int]) -> EngineTrace:
+    """The event loop, runnable from a fresh state or a checkpoint."""
+    by_vid = cp.by_vid
+    out_edges = cp.out_edges
+    pending = cp.pending
+    arrival = cp.arrival
+    proc_busy = cp.proc_busy
+    proc_free_at = cp.proc_free_at
+    proc_queue = cp.proc_queue
+    finish_heap = cp.finish_heap
+    comm = cp.comm
+    record_events = cp.record_events
+    trace = cp.trace
     events = trace.events
-    arrival: dict[int, float] = {v: 0.0 for v in by_vid}
-    # per-processor serialization state (trivial for injective mappings)
-    proc_busy: dict[int, bool] = {}
-    proc_free_at: dict[int, float] = {}
-    proc_queue: dict[int, list[tuple[float, int]]] = {}
-    finish_heap: list[tuple[float, int]] = []
 
     def start_block(v: int, t: float) -> None:
         b = by_vid[v]
@@ -135,16 +169,26 @@ def run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
             # ``max(t, free_at)`` is ``t`` except for ready-at-0 ties
             start_block(v, max(t, proc_free_at.get(p, 0.0)))
 
-    for v in sorted(by_vid):
-        if pending[v] == 0:
-            on_ready(v, 0.0)
+    for v in initial_ready:
+        on_ready(v, 0.0)
 
     while finish_heap or comm.has_active():
         nxt = comm.next_completion()
         # ties: block finishes strictly before transfer completions so
         # a finishing block's own outgoing transfers join the comm
         # state before same-instant completions are popped
-        if finish_heap and (nxt is None or finish_heap[0][0] <= nxt[0]):
+        take_block = finish_heap and (nxt is None
+                                      or finish_heap[0][0] <= nxt[0])
+        t_next = finish_heap[0][0] if take_block else nxt[0]
+        if stop_time is not None and t_next > stop_time:
+            # pause *before* the first event past the stop time: the
+            # executed prefix is exactly the uninterrupted run's events
+            # with time <= stop_time
+            cp.time = stop_time
+            trace.checkpoint = cp
+            trace.horizon = max(trace.finish.values(), default=0.0)
+            return trace
+        if take_block:
             t, v = heapq.heappop(finish_heap)
             b = by_vid[v]
             trace.finish[v] = t
@@ -177,10 +221,71 @@ def run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
             if pending[dst] == 0:
                 on_ready(dst, arrival[dst])
 
-    if len(trace.finish) != len(blocks):
+    if len(trace.finish) != len(by_vid):
         raise ValueError(
-            f"{len(blocks) - len(trace.finish)} blocks never became "
+            f"{len(by_vid) - len(trace.finish)} blocks never became "
             "ready — the block graph is cyclic"
         )
+    trace.checkpoint = None
     trace.horizon = max(trace.finish.values(), default=0.0)
     return trace
+
+
+def run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
+               platform, *, record_events: bool = True,
+               stop_time: float | None = None) -> EngineTrace:
+    """Replay ``blocks``/``edges`` under ``comm``; see module docstring.
+
+    ``stop_time`` pauses the replay after the last event at or before
+    that time; the returned trace then carries a resumable
+    :class:`EngineCheckpoint` (``trace.checkpoint``) unless the replay
+    already completed.  Raises ``ValueError`` when the block graph is
+    cyclic (some block can never start).
+    """
+    by_vid = {b.vid: b for b in blocks}
+    if len(by_vid) != len(blocks):
+        raise ValueError("duplicate block vid")
+    out_edges: dict[int, list[EdgeSpec]] = {v: [] for v in by_vid}
+    pending: dict[int, int] = {v: 0 for v in by_vid}
+    seen_edges: set[tuple[int, int]] = set()
+    for e in edges:
+        # (src, dst) keys transfers throughout (quotient edges are
+        # aggregated); duplicates would alias in the comm models
+        if (e.src, e.dst) in seen_edges:
+            raise ValueError(f"duplicate edge {(e.src, e.dst)}")
+        seen_edges.add((e.src, e.dst))
+        out_edges[e.src].append(e)
+        pending[e.dst] += 1
+    for v in out_edges:
+        out_edges[v].sort(key=lambda e: e.dst)
+
+    comm.reset(platform)
+    trace = EngineTrace(start={}, finish={}, xfer_start={}, xfer_finish={})
+    cp = EngineCheckpoint(
+        time=0.0, by_vid=by_vid, out_edges=out_edges, pending=pending,
+        arrival={v: 0.0 for v in by_vid},
+        # per-processor serialization state (trivial for injective maps)
+        proc_busy={}, proc_free_at={}, proc_queue={}, finish_heap=[],
+        comm=comm, record_events=record_events, trace=trace,
+    )
+    ready = [v for v in sorted(by_vid) if pending[v] == 0]
+    return _drive(cp, stop_time, ready)
+
+
+def resume_engine(checkpoint: EngineCheckpoint, *,
+                  stop_time: float | None = None) -> EngineTrace:
+    """Continue a paused replay from ``checkpoint``.
+
+    ``stop_time`` (which must be ≥ the checkpoint's pause time) pauses
+    again; otherwise the replay runs to completion.  The returned trace
+    is the same object the pausing run returned, extended in place —
+    resuming to completion yields a trace bit-identical to an
+    uninterrupted run.
+    """
+    if stop_time is not None and stop_time < checkpoint.time:
+        raise ValueError(
+            f"stop_time {stop_time} precedes checkpoint time "
+            f"{checkpoint.time}"
+        )
+    checkpoint.trace.checkpoint = None
+    return _drive(checkpoint, stop_time, [])

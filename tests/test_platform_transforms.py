@@ -1,0 +1,164 @@
+"""Property tests: platform transform composition & reindexing.
+
+The elastic transforms — ``without(failed)``, ``with_speed``,
+``with_link_bandwidth``, ``with_processors`` — are the building blocks
+of :mod:`repro.scenario` event application.  These tests pin down the
+composition contract: applying a random event sequence in any
+interleaving (tracking indices through each event's ``proc_map``)
+yields the same surviving processors (by name, speed, memory) and the
+same per-link bandwidth configuration.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import Platform, Processor
+from repro.scenario import (
+    LinkDegrade,
+    ProcArrival,
+    ProcFailure,
+    SpeedChange,
+)
+
+
+def _platform(k=8):
+    return Platform(
+        [Processor(f"p{i}", float(2 + i), float(10 + 4 * i))
+         for i in range(k)],
+        bandwidth=1.0, name="prop",
+        link_bandwidth={(0, 1): 0.5, (1, 0): 0.5, (2, 5): 3.0},
+    )
+
+
+def _signature(plat: Platform):
+    """Index-free fingerprint: processors by name + links by name pair."""
+    procs = {p.name: (p.speed, p.memory) for p in plat.procs}
+    links = {
+        (plat.procs[a].name, plat.procs[b].name): bw
+        for (a, b), bw in plat.link_bandwidth.items()
+    }
+    return procs, links, plat.bandwidth
+
+
+@st.composite
+def _event_specs(draw):
+    """Abstract event specs referencing processors by *original* name,
+    so the same sequence can be lowered at different positions."""
+    n_ops = draw(st.integers(min_value=1, max_value=6))
+    ops = []
+    fresh = 0
+    for _ in range(n_ops):
+        kind = draw(st.sampled_from(
+            ["fail", "speed", "link", "arrive"]))
+        if kind == "fail":
+            ops.append(("fail", draw(st.integers(0, 7))))
+        elif kind == "speed":
+            ops.append(("speed", draw(st.integers(0, 7)),
+                        draw(st.floats(0.1, 4.0))))
+        elif kind == "link":
+            a = draw(st.integers(0, 7))
+            b = draw(st.integers(0, 7))
+            if a == b:
+                b = (b + 1) % 8
+            ops.append(("link", a, b, draw(st.floats(0.05, 5.0)),
+                        draw(st.booleans())))
+        else:
+            ops.append(("arrive", f"new{fresh}",
+                        draw(st.floats(1.0, 8.0)),
+                        draw(st.floats(8.0, 64.0))))
+            fresh += 1
+    return ops
+
+
+def _apply(ops, plat):
+    """Lower name-based specs onto ``plat``, tracking the index map."""
+    name_to_idx = {p.name: j for j, p in enumerate(plat.procs)}
+    cur = plat
+    for op in ops:
+        if op[0] == "fail":
+            j = name_to_idx.get(f"p{op[1]}")
+            if j is None or cur.k <= 1:
+                continue  # already failed (idempotent spec)
+            ev = ProcFailure(0.0, frozenset({j}))
+        elif op[0] == "speed":
+            j = name_to_idx.get(f"p{op[1]}")
+            if j is None:
+                continue  # speed change on a dead processor: no-op
+            ev = SpeedChange(0.0, proc=j, factor=op[2])
+        elif op[0] == "link":
+            a = name_to_idx.get(f"p{op[1]}")
+            b = name_to_idx.get(f"p{op[2]}")
+            if a is None or b is None:
+                continue  # link to a dead processor: no-op
+            ev = LinkDegrade(0.0, src=a, dst=b, bandwidth=op[3],
+                             symmetric=op[4])
+        else:
+            ev = ProcArrival(0.0, (Processor(op[1], op[2], op[3]),))
+        cur, m = ev.apply(cur)
+        name_to_idx = {
+            name: m[j]
+            for name, j in name_to_idx.items() if m[j] is not None
+        }
+        for j, p in enumerate(cur.procs):
+            name_to_idx.setdefault(p.name, j)
+    return cur
+
+
+class TestTransformComposition:
+    @given(ops=_event_specs())
+    @settings(max_examples=60, deadline=None)
+    def test_order_of_commuting_prefixes(self, ops):
+        """Speed/link ops commute with each other and with failures of
+        *other* processors: front-loading them before the failures
+        yields the same signature as the drawn interleaving."""
+        plat = _platform()
+        mixed = _apply(ops, plat)
+        fails = [op for op in ops if op[0] == "fail"]
+        rest = [op for op in ops if op[0] != "fail"]
+        front = _apply(rest + fails, plat)
+        assert _signature(mixed) == _signature(front)
+
+    @given(ops=_event_specs())
+    @settings(max_examples=60, deadline=None)
+    def test_proc_map_tracks_identity(self, ops):
+        """Every surviving processor keeps its name/memory through any
+        sequence, and the tracked index always points at it."""
+        plat = _platform()
+        cur = _apply(ops, plat)
+        names = [p.name for p in cur.procs]
+        assert len(names) == len(set(names))
+        orig = {p.name: p for p in plat.procs}
+        for p in cur.procs:
+            if p.name in orig:
+                assert p.memory == orig[p.name].memory
+
+    @given(ops=_event_specs())
+    @settings(max_examples=40, deadline=None)
+    def test_links_never_dangle(self, ops):
+        plat = _platform()
+        cur = _apply(ops, plat)
+        for (a, b) in cur.link_bandwidth:
+            assert 0 <= a < cur.k and 0 <= b < cur.k
+
+    def test_failure_reindexes_links_and_speed_composes(self):
+        plat = _platform()
+        # degrade link p2<->p5, slow p5, then fail p0..p1: the link and
+        # the slowdown must follow p2/p5 to their compacted indices
+        cur, m1 = LinkDegrade(0.0, src=2, dst=5,
+                              bandwidth=0.25).apply(plat)
+        cur, m2 = SpeedChange(0.0, proc=5, factor=0.5).apply(cur)
+        cur, m3 = ProcFailure(0.0, frozenset({0, 1})).apply(cur)
+        j2, j5 = m3[m2[m1[2]]], m3[m2[m1[5]]]
+        assert cur.procs[j2].name == "p2" and cur.procs[j5].name == "p5"
+        assert cur.bandwidth_between(j2, j5) == 0.25
+        assert cur.bandwidth_between(j5, j2) == 0.25
+        assert cur.speed(j5) == pytest.approx(plat.speed(5) * 0.5)
+        # and the same end state when the failure comes first
+        alt, n1 = ProcFailure(0.0, frozenset({0, 1})).apply(plat)
+        alt, n2 = LinkDegrade(0.0, src=n1[2], dst=n1[5],
+                              bandwidth=0.25).apply(alt)
+        alt, _ = SpeedChange(0.0, proc=n2[n1[5]], factor=0.5).apply(alt)
+        assert _signature(alt) == _signature(cur)

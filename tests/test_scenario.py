@@ -1,0 +1,568 @@
+"""repro.scenario: engine pause/resume, warm-start replanning,
+timeline stitching, migration accounting, and the elastic consumers."""
+import json
+
+import pytest
+
+from repro.core import (
+    Platform,
+    Processor,
+    ResumeState,
+    Scheduler,
+    SchedulerConfig,
+    Workflow,
+    default_cluster,
+    generate_workflow,
+    residual_workflow,
+    schedule,
+    validate_mapping,
+)
+from repro.runtime.fault import StragglerMonitor
+from repro.scenario import (
+    LinkDegrade,
+    ProcArrival,
+    ProcFailure,
+    Scenario,
+    SpeedChange,
+    TimelineReport,
+    event_from_dict,
+    run_scenario,
+)
+from repro.sim import build_specs, resolve_comm, resume_engine, run_engine
+
+KPRIME = [2, 4, 9]
+
+
+def _wf(family="montage", n=200, seed=1, plat=None):
+    return generate_workflow(family, n, seed=seed,
+                             platform=plat or default_cluster())
+
+
+# ---------------------------------------------------------------------- #
+# engine pause / resume
+# ---------------------------------------------------------------------- #
+class TestEnginePause:
+    @pytest.fixture(scope="class")
+    def specs(self):
+        plat = default_cluster()
+        wf = _wf("epigenomics", 300, 2, plat)
+        res = schedule(wf, plat, kprime=[6]).best
+        blocks, edges = build_specs(res.quotient, plat)
+        return plat, blocks, edges
+
+    @pytest.mark.parametrize("comm", ["contention-free", "fair-share"])
+    def test_pause_resume_bit_identical(self, specs, comm):
+        plat, blocks, edges = specs
+        full = run_engine(blocks, edges, resolve_comm(comm), plat)
+        tr = run_engine(blocks, edges, resolve_comm(comm), plat,
+                        stop_time=full.horizon * 0.3)
+        assert tr.paused
+        # pause freezes exactly the <= stop_time prefix
+        cut = full.horizon * 0.3
+        assert set(tr.finish) == {v for v, t in full.finish.items()
+                                  if t <= cut}
+        tr = resume_engine(tr.checkpoint, stop_time=full.horizon * 0.7)
+        assert tr.paused
+        tr = resume_engine(tr.checkpoint)
+        assert not tr.paused
+        assert tr.start == full.start
+        assert tr.finish == full.finish
+        assert tr.xfer_start == full.xfer_start
+        assert tr.xfer_finish == full.xfer_finish
+        assert tr.horizon == full.horizon
+
+    def test_in_flight_classification(self, specs):
+        plat, blocks, edges = specs
+        full = run_engine(blocks, edges, resolve_comm("contention-free"),
+                          plat)
+        cut = full.horizon * 0.5
+        tr = run_engine(blocks, edges, resolve_comm("contention-free"),
+                        plat, stop_time=cut)
+        for v in tr.in_flight():
+            assert full.start[v] <= cut < full.finish[v]
+
+    def test_stop_past_horizon_completes(self, specs):
+        plat, blocks, edges = specs
+        full = run_engine(blocks, edges, resolve_comm("contention-free"),
+                          plat)
+        tr = run_engine(blocks, edges, resolve_comm("contention-free"),
+                        plat, stop_time=full.horizon * 2)
+        assert not tr.paused and tr.finish == full.finish
+
+    def test_resume_rejects_earlier_stop(self, specs):
+        plat, blocks, edges = specs
+        tr = run_engine(blocks, edges, resolve_comm("contention-free"),
+                        plat, stop_time=10.0)
+        if tr.paused:
+            with pytest.raises(ValueError, match="precedes"):
+                resume_engine(tr.checkpoint, stop_time=1.0)
+
+
+# ---------------------------------------------------------------------- #
+# residual extraction
+# ---------------------------------------------------------------------- #
+class TestResidualWorkflow:
+    def test_requirement_preserved_on_frontier(self, diamond):
+        sub, mapping = residual_workflow(diamond, {0})
+        assert mapping == [1, 2, 3]
+        # frontier tasks keep their full requirement: the boundary
+        # input volume is folded into task memory
+        for i, u in enumerate(mapping):
+            assert sub.task_requirement(i) == pytest.approx(
+                diamond.task_requirement(u))
+        assert sorted(sub.sources()) == [0, 1]  # old tasks 1 and 2
+
+    def test_rejects_non_closed_prefix(self, diamond):
+        with pytest.raises(ValueError, match="closed under predecessors"):
+            residual_workflow(diamond, {3})
+
+    def test_empty_completed_is_identity_shape(self, diamond):
+        sub, mapping = residual_workflow(diamond, set())
+        assert mapping == [0, 1, 2, 3]
+        assert sub.n_edges == diamond.n_edges
+
+
+# ---------------------------------------------------------------------- #
+# the identity anchor
+# ---------------------------------------------------------------------- #
+class TestIdentityAnchor:
+    def test_empty_timeline_matches_schedule(self):
+        plat = default_cluster()
+        wf = _wf()
+        cfg = SchedulerConfig(kprime=KPRIME, simulate=True)
+        plain = Scheduler(cfg).schedule(wf, plat)
+        tl = run_scenario(Scenario(wf, plat, []), config=cfg)
+        assert tl.feasible and len(tl.segments) == 1
+        # bit-exact: same best makespan, same simulated makespan
+        assert tl.segments[0].report.makespan == plain.makespan
+        assert tl.makespan == plain.sim.makespan
+        assert tl.migrations == [] and tl.replan_times_s == []
+
+    def test_event_after_completion_is_noop(self):
+        plat = default_cluster()
+        wf = _wf()
+        cfg = SchedulerConfig(kprime=KPRIME)
+        plain = Scheduler(cfg).schedule(wf, plat)
+        tl = run_scenario(
+            Scenario(wf, plat, [ProcFailure(plain.makespan * 10, {0})]),
+            config=cfg)
+        assert tl.feasible and len(tl.segments) == 1
+        assert tl.makespan == pytest.approx(plain.makespan)
+
+
+# ---------------------------------------------------------------------- #
+# failure scenarios + policies
+# ---------------------------------------------------------------------- #
+class TestFailureScenarios:
+    @pytest.fixture(scope="class")
+    def setting(self):
+        plat = default_cluster()
+        wf = _wf("montage", 200, 1, plat)
+        cfg = SchedulerConfig(kprime=KPRIME)
+        base = Scheduler(cfg).schedule(wf, plat)
+        q = base.best.quotient
+        used = sorted({q.proc[v] for v in q.members})
+        te = 0.4 * base.makespan
+        return plat, wf, cfg, base, used, te
+
+    def test_warm_start_freezes_completed_and_pins_inflight(self, setting):
+        plat, wf, cfg, base, used, te = setting
+        sc = Scenario(wf, plat, [ProcFailure(te, frozenset(used[:2]))])
+        tl = run_scenario(sc, "pinned-warm-start", config=cfg)
+        assert tl.feasible and len(tl.segments) == 2
+        assert tl.validate() == []  # memory_trace=True per segment
+
+        seg0, seg1 = tl.segments
+        cut = seg0.executed_until
+        sim0 = seg0.sim
+        q0 = seg0.mapping.quotient
+        completed = {v for v, f in sim0.block_finish.items() if f <= cut}
+        inflight = {v for v, s in sim0.block_start.items()
+                    if s < cut and v not in completed}
+        done_tasks = set()
+        for v in completed:
+            done_tasks |= {seg0.task_ids[u] for u in q0.members[v]}
+        # completed tasks left the workflow for good
+        assert done_tasks.isdisjoint(seg1.task_ids)
+        assert seg1.completed_before == len(done_tasks)
+
+        # in-flight blocks on surviving processors stay put (by name)
+        q1 = seg1.mapping.quotient
+        inv1 = {g: i for i, g in enumerate(seg1.task_ids)}
+        proc_name1 = {}
+        for vid, members in q1.members.items():
+            nm = seg1.platform.procs[q1.proc[vid]].name
+            for u in members:
+                proc_name1[u] = nm
+        failed_names = {plat.procs[j].name for j in used[:2]}
+        for v in inflight:
+            old_name = plat.procs[q0.proc[v]].name
+            if old_name in failed_names:
+                continue  # displaced, not pinned
+            for u in q0.members[v]:
+                assert proc_name1[inv1[seg0.task_ids[u]]] == old_name
+
+        # migration log agrees on the restart accounting (moved_tasks
+        # may be > 0: Step 4 is free to improve *unstarted* blocks)
+        m = tl.migrations[0]
+        assert m.restarted_blocks == len(inflight)
+        assert m.restarted_tasks == sum(len(q0.members[v])
+                                        for v in inflight)
+        assert m.lost_work > 0
+
+    def test_full_replan_feasible_and_valid(self, setting):
+        plat, wf, cfg, base, used, te = setting
+        sc = Scenario(wf, plat, [ProcFailure(te, frozenset(used[:2]))])
+        tl = run_scenario(sc, "full-replan", config=cfg)
+        assert tl.feasible
+        assert tl.validate() == []
+        assert tl.segments[-1].report.algorithm == "dag_het_part"
+
+    def test_no_replan_structured_infeasibility_on_failure(self, setting):
+        plat, wf, cfg, base, used, te = setting
+        sc = Scenario(wf, plat, [ProcFailure(te, frozenset(used[:2]))])
+        tl = run_scenario(sc, "no-replan", config=cfg)
+        assert not tl.feasible
+        assert tl.makespan is None
+        assert tl.failed_at == pytest.approx(te)
+        assert tl.infeasibility is not None
+
+    def test_no_replan_survives_untouched_failure(self, setting):
+        plat, wf, cfg, base, used, te = setting
+        idle = [j for j in range(plat.k) if j not in used]
+        sc = Scenario(wf, plat, [ProcFailure(te, frozenset(idle[:1]))])
+        tl = run_scenario(sc, "no-replan", config=cfg)
+        assert tl.feasible
+        assert tl.migrations[0].moved_tasks == 0
+        assert tl.migrations[0].displaced_tasks == 0
+
+    def test_speed_change_replans_feasibly(self, setting):
+        plat, wf, cfg, base, used, te = setting
+        events = [SpeedChange(te, proc=used[0], factor=0.25)]
+        tl = run_scenario(Scenario(wf, plat, events),
+                          "pinned-warm-start", config=cfg)
+        assert tl.feasible and tl.validate() == []
+        assert tl.segments[1].platform.speed(used[0]) == pytest.approx(
+            plat.speed(used[0]) * 0.25)
+
+    def test_link_degrade_and_arrival_chain(self, setting):
+        plat, wf, cfg, base, used, te = setting
+        events = [
+            LinkDegrade(te, src=used[0], dst=used[1], bandwidth=0.05),
+            ProcArrival(te * 1.5,
+                        procs=(Processor("fresh-0", 64.0, 256.0),)),
+        ]
+        tl = run_scenario(Scenario(wf, plat, events),
+                          "pinned-warm-start", config=cfg)
+        assert tl.feasible and tl.validate() == []
+        assert tl.segments[-1].platform.k == plat.k + 1
+
+    def test_inflight_transfer_never_silently_dropped(self):
+        # A(20) --100--> B(10) on two unit-speed procs: makespan 130.
+        # A no-op event at t=50 lands mid-transfer; A's output is not
+        # durable yet, so A restarts — the stitched makespan must never
+        # undercut the no-event one (a dropped transfer once made it 60)
+        wf = Workflow(2)
+        wf.work[:] = [20.0, 10.0]
+        wf.mem[:] = [1.0, 1.0]
+        wf.add_edge(0, 1, 100.0)
+        plat = Platform([Processor("a", 1.0, 1e6),
+                         Processor("b", 1.0, 1e6)], 1.0)
+        cfg = SchedulerConfig(kprime=[2])
+        base = Scheduler(cfg).schedule(wf, plat)
+        assert base.makespan == pytest.approx(130.0)
+        sc = Scenario(wf, plat, [SpeedChange(50.0, proc=0, factor=1.0)])
+        tl = run_scenario(sc, "no-replan", config=cfg,
+                          initial_report=base)
+        assert tl.feasible
+        assert tl.makespan >= base.makespan  # no silent transfer drop
+        assert tl.makespan == pytest.approx(50.0 + 130.0)  # restart
+        m = tl.migrations[0]
+        assert m.restarted_blocks == 1  # A: delivered nothing durable
+        assert m.lost_work == pytest.approx(20.0)  # its full compute
+        # whereas an event after the transfer landed freezes A for
+        # good: only B (mid-compute at t=125) restarts -> 125 + 10
+        sc2 = Scenario(wf, plat, [SpeedChange(125.0, proc=0, factor=1.0)])
+        tl2 = run_scenario(sc2, "no-replan", config=cfg,
+                           initial_report=base)
+        assert tl2.makespan == pytest.approx(125.0 + 10.0)
+        assert tl2.migrations[0].restarted_blocks == 1  # B mid-compute
+        assert tl2.segments[1].completed_before == 1    # A frozen
+
+    def test_pipeline_sim_options_govern_pause_model(self, setting):
+        # cfg.simulate reuses the pipeline SimReport; a conflicting
+        # caller-side sim_options must not leak into the pause engine
+        plat, wf, cfg, base, used, te = setting
+        from dataclasses import replace
+        cfg_sim = replace(cfg, simulate=True)
+        sc = Scenario(wf, plat, [ProcFailure(te, frozenset(used[:1]))])
+        tl = run_scenario(sc, "warm+fallback", config=cfg_sim,
+                          sim_options={"comm": "fair-share"})
+        assert tl.feasible
+        for seg in tl.segments:
+            assert seg.sim.comm == "contention-free"
+
+    def test_warm_cold_fallback_rescues_infeasible_warm(self):
+        # full-sweep montage mapping where failing the 4 fastest used
+        # processors strands a 192-requirement block: the pure warm
+        # start is structurally infeasible (no split in warm mode),
+        # the fallback escalates to a cold replan and completes
+        plat = default_cluster()
+        wf = _wf("montage", 200, 1, plat)
+        cfg = SchedulerConfig(kprime=[1, 2, 4, 6, 9, 13, 19, 28, 36])
+        base = Scheduler(cfg).schedule(wf, plat)
+        q = base.best.quotient
+        fastest = sorted({q.proc[v] for v in q.members},
+                         key=lambda j: -plat.speed(j))[:4]
+        sc = Scenario(wf, plat,
+                      [ProcFailure(0.1 * base.makespan,
+                                   frozenset(fastest))])
+        warm = run_scenario(sc, "pinned-warm-start", config=cfg,
+                            initial_report=base)
+        assert not warm.feasible
+        assert warm.infeasibility.stage == "merge"
+        rescued = run_scenario(sc, "warm+fallback", config=cfg,
+                               initial_report=base)
+        assert rescued.feasible and rescued.validate() == []
+        assert rescued.policy == "pinned-warm-start+cold-fallback"
+
+    def test_infeasible_initial_plan_is_structured(self):
+        tiny = Platform([Processor("p0", 1.0, 1.0),
+                         Processor("p1", 1.0, 1.0)], 1.0)
+        wf = _wf("blast", 60, 3)  # memories far above 1.0
+        tl = run_scenario(Scenario(wf, tiny, [ProcFailure(5.0, {0})]),
+                          config=SchedulerConfig(kprime=[1, 2]))
+        assert not tl.feasible and tl.segments == []
+        assert tl.failed_at == 0.0 and tl.infeasibility is not None
+
+    def test_json_roundtrip_and_gantt(self, setting):
+        plat, wf, cfg, base, used, te = setting
+        sc = Scenario(wf, plat, [ProcFailure(te, frozenset(used[:2]))])
+        tl = run_scenario(sc, "pinned-warm-start", config=cfg)
+        back = TimelineReport.from_json(tl.to_json())
+        assert back.makespan == tl.makespan
+        assert back.policy == tl.policy
+        assert len(back.segments) == len(tl.segments)
+        assert [m.to_dict() for m in back.migrations] == \
+            [m.to_dict() for m in tl.migrations]
+        g = tl.gantt(width=48)
+        assert "▼" in g and "░" not in g.split("\n")[0]
+        # deserialized reports flag missing live mappings, not crash
+        assert any("live mapping" in e for e in back.validate())
+
+
+# ---------------------------------------------------------------------- #
+# Scheduler.resume / warm-start mode
+# ---------------------------------------------------------------------- #
+class TestSchedulerResume:
+    def test_resume_of_own_partition_reproduces_makespan(self):
+        plat = default_cluster()
+        wf = _wf()
+        rep = schedule(wf, plat, kprime=KPRIME)
+        q = rep.best.quotient
+        vids = sorted(q.members)
+        state = ResumeState(
+            wf=wf, platform=plat,
+            blocks=[sorted(q.members[v]) for v in vids],
+            proc_of_block=[q.proc[v] for v in vids])
+        warm = Scheduler(SchedulerConfig()).resume(state)
+        assert warm.feasible
+        assert warm.algorithm == "warm_start"
+        # Step 4 already converged in the cold run: no further gain,
+        # and the warm result must still be valid
+        assert warm.makespan <= rep.makespan
+        assert validate_mapping(wf, warm.best) == []
+
+    def test_pinned_blocks_never_move(self):
+        plat = default_cluster()
+        wf = _wf("bwa", 150, 4, plat)
+        rep = schedule(wf, plat, kprime=KPRIME)
+        q = rep.best.quotient
+        vids = sorted(q.members)
+        pinned = set(range(len(vids)))  # pin everything
+        state = ResumeState(
+            wf=wf, platform=plat,
+            blocks=[sorted(q.members[v]) for v in vids],
+            proc_of_block=[q.proc[v] for v in vids],
+            pinned=pinned)
+        warm = Scheduler(SchedulerConfig()).resume(state)
+        assert warm.feasible
+        q2 = warm.best.quotient
+        for i, v in enumerate(vids):
+            members = set(q.members[v])
+            match = [v2 for v2, m2 in q2.members.items()
+                     if members <= m2]
+            assert len(match) == 1
+            assert q2.proc[match[0]] == q.proc[v]
+
+    def test_resume_state_validates_pins(self):
+        wf = _wf("blast", 20, 0)
+        plat = default_cluster()
+        with pytest.raises(ValueError, match="pin"):
+            ResumeState(wf=wf, platform=plat,
+                        blocks=[list(range(wf.n))],
+                        proc_of_block=[None], pinned={0})
+
+    def test_orphaned_block_rehomed_or_structured_failure(self):
+        plat = default_cluster()
+        wf = _wf()
+        rep = schedule(wf, plat, kprime=KPRIME)
+        q = rep.best.quotient
+        vids = sorted(q.members)
+        procs = [q.proc[v] for v in vids]
+        procs[0] = None  # orphan one block
+        state = ResumeState(
+            wf=wf, platform=plat,
+            blocks=[sorted(q.members[v]) for v in vids],
+            proc_of_block=procs)
+        warm = Scheduler(SchedulerConfig()).resume(state)
+        assert warm.feasible  # plenty of idle processors to re-home to
+        assert validate_mapping(wf, warm.best) == []
+
+
+# ---------------------------------------------------------------------- #
+# events
+# ---------------------------------------------------------------------- #
+class TestEvents:
+    def test_roundtrip(self):
+        evs = [
+            ProcFailure(3.0, frozenset({1, 4})),
+            ProcArrival(5.0, (Processor("x", 2.0, 8.0),)),
+            SpeedChange(7.0, proc=2, factor=0.5),
+            LinkDegrade(9.0, src=0, dst=3, bandwidth=0.1,
+                        symmetric=False),
+        ]
+        for e in evs:
+            back = event_from_dict(json.loads(json.dumps(e.to_dict())))
+            assert back == e
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ProcFailure(-1.0, {0})
+        with pytest.raises(ValueError):
+            ProcFailure(1.0, frozenset())
+        with pytest.raises(ValueError):
+            SpeedChange(1.0, proc=0, factor=0.0)
+        with pytest.raises(ValueError):
+            LinkDegrade(1.0, src=0, dst=1, bandwidth=-2.0)
+        plat = Platform([Processor("a", 1.0, 1.0),
+                         Processor("b", 1.0, 1.0)], 1.0)
+        with pytest.raises(ValueError, match="every processor"):
+            ProcFailure(0.0, {0, 1}).apply(plat)
+        with pytest.raises(ValueError, match="out of range"):
+            SpeedChange(0.0, proc=9, factor=0.5).apply(plat)
+
+    def test_failure_proc_map_compacts(self):
+        plat = default_cluster()
+        new, m = ProcFailure(0.0, {1, 3}).apply(plat)
+        assert new.k == plat.k - 2
+        assert m[1] is None and m[3] is None
+        assert m[0] == 0 and m[2] == 1 and m[4] == 2
+        assert new.procs[m[4]].name == plat.procs[4].name
+
+
+# ---------------------------------------------------------------------- #
+# straggler monitor -> scenario events
+# ---------------------------------------------------------------------- #
+class TestStragglerEvents:
+    def _monitor(self):
+        mon = StragglerMonitor(threshold=1.5)
+        for _ in range(8):
+            mon.record(0, 1.0)
+            mon.record(1, 1.1)
+            mon.record(2, 4.0)
+        return mon
+
+    def test_median_based_slowdown_factor(self):
+        mon = self._monitor()
+        factors = mon.slowdown_factors()
+        # overall lower median of {1.0, 1.1, 4.0} is 1.1; only host 2
+        # exceeds 1.5x it, delivering 1.1/4.0 of nominal speed
+        assert set(factors) == {2}
+        assert factors[2] == pytest.approx(1.1 / 4.0)
+
+    def test_emits_speed_change_events(self):
+        mon = self._monitor()
+        plat = Platform([Processor(f"p{i}", 100.0, 10.0)
+                         for i in range(3)], 1.0)
+        evs = mon.speed_events(plat, host_of_proc=lambda j: j, at=12.5)
+        assert len(evs) == 1
+        (ev,) = evs
+        assert isinstance(ev, SpeedChange)
+        assert ev.time == 12.5 and ev.proc == 2
+        assert ev.factor == pytest.approx(1.1 / 4.0)
+        degraded, m = ev.apply(plat)
+        assert degraded.speed(2) == pytest.approx(100.0 * 1.1 / 4.0)
+        assert m == {0: 0, 1: 1, 2: 2}
+
+    def test_degraded_platform_composes_events(self):
+        mon = self._monitor()
+        plat = Platform([Processor(f"p{i}", 100.0, 10.0)
+                         for i in range(3)], 1.0,
+                        link_bandwidth={(0, 1): 0.5, (1, 0): 0.5})
+        degraded = mon.degraded_platform(plat, host_of_proc=lambda j: j)
+        assert degraded.speed(2) == pytest.approx(100.0 * 1.1 / 4.0)
+        assert degraded.speed(0) == 100.0
+        # the old rebuild dropped link overrides; composition keeps them
+        assert degraded.link_bandwidth == plat.link_bandwidth
+        assert degraded.name.endswith("-degraded")
+
+    def test_scenario_consumes_straggler_events(self):
+        plat = default_cluster()
+        wf = _wf("soykb", 120, 5, plat)
+        cfg = SchedulerConfig(kprime=[2, 4])
+        base = Scheduler(cfg).schedule(wf, plat)
+        mon = StragglerMonitor(threshold=1.5)
+        q = base.best.quotient
+        slow = sorted({q.proc[v] for v in q.members})[0]
+        for _ in range(8):
+            for j in range(plat.k):
+                mon.record(j, 3.0 if j == slow else 1.0)
+        evs = mon.speed_events(plat, host_of_proc=lambda j: j,
+                               at=0.3 * base.makespan)
+        assert evs
+        tl = run_scenario(Scenario(wf, plat, evs),
+                          "pinned-warm-start", config=cfg)
+        assert tl.feasible and tl.validate() == []
+
+
+# ---------------------------------------------------------------------- #
+# elastic rescale on the scenario API
+# ---------------------------------------------------------------------- #
+class TestRescalePlan:
+    def _fleet(self, n_v5e=48, n_v4=16):
+        from repro.core.platform import tpu_fleet_si
+        return tpu_fleet_si({"v5e": n_v5e, "v4": n_v4})
+
+    def test_infeasible_before_failure_is_structured(self):
+        from repro.configs import get_config, shape_by_name
+        from repro.runtime import rescale_plan
+        cfg = get_config("jamba_15_large")  # 400B params, tiny fleet
+        report = rescale_plan(cfg, shape_by_name("decode_32k"),
+                              self._fleet(4, 0), failed={0},
+                              kprime=[1, 2, 4])
+        assert not report.feasible
+        assert report.old_plan is None and report.new_plan is None
+        assert report.infeasibility is not None
+        assert report.timeline.segments == []
+
+    def test_mid_trace_warm_start_rescale(self):
+        from repro.configs import get_config, shape_by_name
+        from repro.runtime import rescale_plan
+        cfg = get_config("olmoe_1b_7b")
+        plat = self._fleet()
+        probe = rescale_plan(cfg, shape_by_name("decode_32k"), plat,
+                             failed={0, 1, 2, 3},
+                             kprime=[16, 32, 48, 64])
+        assert probe.feasible
+        report = rescale_plan(cfg, shape_by_name("decode_32k"), plat,
+                              failed={0, 1, 2, 3},
+                              at=0.5 * probe.est_step_before_s,
+                              policy="pinned-warm-start",
+                              kprime=[16, 32, 48, 64])
+        assert report.feasible
+        assert report.new_plan.valid
+        assert report.timeline.makespan > 0
+        assert report.new_plan.mapping.platform.k == plat.k - 4
+        # mid-trace: the failure fired, so a migration was logged
+        assert len(report.timeline.migrations) == 1
