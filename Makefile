@@ -2,11 +2,17 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: verify test fast bench bench-large bench-sweep bench-sim \
-	bench-scenario
+	bench-scenario bench-step2 docs-check
 
-# tier-1 verification (ROADMAP.md)
+# tier-1 verification (ROADMAP.md) + executable-docs check
 verify:
 	python -m pytest -x -q
+	python tools/docs_check.py
+
+# run the code fences in README.md, docs/*.md and examples/README.md
+# (doctest fences verbatim, plain python fences executed)
+docs-check:
+	python tools/docs_check.py
 
 # full test suite without -x (see every failure)
 test:
@@ -22,9 +28,15 @@ fast:
 bench:
 	python -m benchmarks.bench_runtime
 
-# paper-scale runtime tier (n = 10000 / 30000) -> BENCH_runtime.json
+# paper-scale runtime tier (n = 10000 / 30000) plus the scalar-vs-flat
+# Step-2 before/after comparison (n = 1000 / 30000) -> BENCH_runtime.json
 bench-large:
 	python -m benchmarks.bench_runtime --large
+
+# scalar-vs-flat Step-2 comparison on the n=1000 suite only
+# -> BENCH_runtime.json ("step2")
+bench-step2:
+	python -m benchmarks.bench_runtime --step2
 
 # parallel-vs-serial k' sweep on the n=1000 suite -> BENCH_runtime.json
 bench-sweep:

@@ -6,14 +6,21 @@ Python-vs-C++ constant differs; the *shape* (relative trend with size)
 is the claim under test.
 
 ``python -m benchmarks.bench_runtime`` runs the quick tier (200/1000
-tasks).  ``--large`` runs the paper-scale tier (10000/30000 tasks).
-``--sweep`` runs the parallel-vs-serial k' sweep comparison on the
-n=1000 suite (``make bench-sweep``): per worker count, wall-clock and
-the best makespan, asserting the parallel sweep is bit-identical to
-serial.  All tiers append their results to ``BENCH_runtime.json`` so
-the perf trajectory is tracked across PRs (the file maps tier ->
-per-size aggregate plus per-family rows; it is rewritten after every
-size group so a partial run still leaves usable data on disk).
+tasks).  ``--large`` runs the paper-scale tier (10000/30000 tasks)
+followed by the Step-2 before/after comparison (below) at n=1000 and
+n=30000.  ``--sweep`` runs the parallel-vs-serial k' sweep comparison
+on the n=1000 suite (``make bench-sweep``): per worker count,
+wall-clock and the best makespan, asserting the parallel sweep is
+bit-identical to serial.  ``--step2`` runs only the scalar-vs-flat
+Step-2 comparison on the n=1000 suite (``make bench-step2``): each
+family is scheduled once with the scalar Step-2 implementation forced
+and once with the flat-array dispatch (the default), makespans are
+asserted bit-identical, and per-family assign-stage ("Step-2 share")
+plus end-to-end wall clocks land under the ``step2`` tier.  All tiers
+append their results to ``BENCH_runtime.json`` so the perf trajectory
+is tracked across PRs (the file maps tier -> per-size aggregate plus
+per-family rows; it is rewritten after every size group so a partial
+run still leaves usable data on disk).
 """
 from __future__ import annotations
 
@@ -147,9 +154,77 @@ def run_sweep(n: int = 1000, seeds=(1,), workers=None,
     return tier_out
 
 
+def run_step2(sizes=(1000,), seeds=(1,), write_json: bool = True) -> dict:
+    """Scalar-vs-flat Step 2 before/after comparison (``--step2``).
+
+    For every family instance, runs the identical k' sweep once with
+    the scalar Step-2 implementation forced ("before") and once with
+    the flat-array dispatch ("after", the production default), asserts
+    the best makespans are bit-identical, and appends per-family
+    assign-stage times (the Step-2 share) and end-to-end wall clocks
+    to the ``step2`` tier of ``BENCH_runtime.json``.
+    """
+    from repro.core.memdag import set_step2_impl, step2_impl
+
+    plat = default_cluster()
+    results = _load_results()
+    tier_out = results.setdefault("step2", {})
+    prev_impl = step2_impl()
+    try:
+        for n in sizes:
+            rows: list[dict] = []
+            for family, n_, seed, wf in workflow_suite(plat, (n,), seeds):
+                row: dict = {"family": family, "seed": seed}
+                for mode, label in (("scalar", "before"),
+                                    ("auto", "after")):
+                    set_step2_impl(mode)
+                    t0 = time.perf_counter()
+                    rep = schedule(wf, plat, algorithm="dag_het_part",
+                                   kprime=KPRIME)
+                    dt = time.perf_counter() - t0
+                    row[f"{label}_total_s"] = dt
+                    row[f"{label}_assign_s"] = \
+                        rep.stage_times.get("assign", 0.0)
+                    if "makespan" in row:
+                        assert rep.makespan == row["makespan"], (
+                            f"flat Step 2 diverged on {family} n={n}: "
+                            f"{rep.makespan} != {row['makespan']}"
+                        )
+                    row["makespan"] = rep.makespan
+                if row["after_assign_s"]:
+                    row["assign_speedup"] = (row["before_assign_s"]
+                                             / row["after_assign_s"])
+                row["total_speedup"] = (row["before_total_s"]
+                                        / row["after_total_s"])
+                emit(f"step2/n={n}/{family}/assign_speedup",
+                     row.get("assign_speedup", float("nan")),
+                     "x;identical_makespan")
+                emit(f"step2/n={n}/{family}/total_speedup",
+                     row["total_speedup"], "x")
+                rows.append(row)
+                tier_out[f"n={n}"] = {
+                    "kprime": list(KPRIME),
+                    "families": rows,
+                    "assign_speedup_geomean": geomean(
+                        [r.get("assign_speedup") for r in rows]),
+                    "total_speedup_geomean": geomean(
+                        [r["total_speedup"] for r in rows]),
+                }
+                if write_json:
+                    _write_results(results)
+    finally:
+        set_step2_impl(prev_impl)
+    return tier_out
+
+
 if __name__ == "__main__":
     if "--large" in sys.argv:
         run(sizes=(10000, 30000), seeds=(1,), tier="large")
+        # ROADMAP hot-spot closure evidence: Step-2 share at n=1000,
+        # end-to-end before/after at paper scale
+        run_step2(sizes=(1000, 30000), seeds=(1,))
+    elif "--step2" in sys.argv:
+        run_step2()
     elif "--sweep" in sys.argv:
         run_sweep()
     else:

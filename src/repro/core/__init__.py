@@ -16,7 +16,15 @@ heterogeneous platforms (Kulagina, Meyerhenke, Benoit — ICPP'24):
 * :mod:`repro.core.scheduler` — the unified Scheduler/Plan API,
 * :mod:`repro.core.workflows` — workflow-instance generators,
 * :mod:`repro.core.modelgraph` — model architectures as workflow DAGs,
-* :mod:`repro.core.autoshard` — placement planning for the JAX runtime.
+* :mod:`repro.core.autoshard` — placement planning for the JAX runtime,
+* :mod:`repro.core.counters` — perf-cache counters surfaced as
+  ``ScheduleReport.cache_stats``.
+
+Start with the top-level ``README.md`` for the quickstart and
+subsystem map; ``docs/architecture.md`` covers the pipeline-stage
+registry, the warm-start flow and the scaling machinery, and
+``docs/benchmarks.md`` the ``BENCH_runtime.json`` schema.  All code
+fences in those documents are executable (``make docs-check``).
 
 Scheduling API
 --------------
@@ -39,10 +47,27 @@ Step 4    idle_moves    critical-path moves to faster idle processors
 values (in parallel for ``workers > 1``, bit-identical best makespans)
 and always returns a :class:`~repro.core.scheduler.ScheduleReport`:
 the best :class:`MappingResult` *or* a structured
-:class:`~repro.core.scheduler.Infeasibility`, plus per-stage timings
-and the full k'→makespan sweep trace (``to_json``/``from_json`` for
-benchmark artifacts).  The legacy :func:`dag_het_part` /
-:func:`dag_het_mem` entry points are deprecated thin wrappers over it.
+:class:`~repro.core.scheduler.Infeasibility`, plus per-stage timings,
+per-run cache statistics (``cache_stats``) and the full k'→makespan
+sweep trace (``to_json``/``from_json`` for benchmark artifacts).  The
+legacy :func:`dag_het_part` / :func:`dag_het_mem` entry points are
+deprecated thin wrappers over it.
+
+Scaling (30k-task instances)
+----------------------------
+All four ROADMAP hot spots are closed: the k' sweep parallelizes
+(PR 2); Step 2 runs on flat numpy arrays — a cached CSR view of the
+workflow with token-stamped per-task vectors computes every block's
+``during``/``delta`` constants via sequential ``np.bincount`` (bit-
+identical floats) and the greedy ready-heap pops ``np.lexsort`` ranks;
+committed Step-3 merges keep topological ranks exact through
+Pearce–Kelly localized reordering, which also bounds the merge
+acyclicity probe to the affected rank window; and Step-4 rescans reuse
+probe verdicts whose dependency region an applied swap did not touch.
+Every layer is decision-for-decision identical to the scalar/uncached
+paths (property-tested); ``make bench-large`` records the before/after
+under ``"step2"`` in ``BENCH_runtime.json``.  Design notes in
+``docs/architecture.md``.
 
 Simulation
 ----------
@@ -133,8 +158,10 @@ from .memdag import (
     block_requirement_witness,
     exact_min_peak,
     greedy_min_peak,
+    set_step2_impl,
     simulate_peak,
     simulate_peak_members,
+    step2_impl,
 )
 from .partitioner import acyclic_partition, edge_cut, partition_block
 from .baseline import MappingResult, dag_het_mem, validate_mapping
@@ -167,6 +194,7 @@ __all__ = [
     "IncrementalEvaluator",
     "block_requirement", "block_requirement_witness",
     "exact_min_peak", "greedy_min_peak",
+    "set_step2_impl", "step2_impl",
     "simulate_peak", "simulate_peak_members",
     "acyclic_partition", "edge_cut", "partition_block",
     "MappingResult", "dag_het_mem", "dag_het_part", "validate_mapping",

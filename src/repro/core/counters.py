@@ -1,0 +1,46 @@
+"""Lightweight global perf counters for the scheduling hot paths.
+
+The scheduler's pipeline stages are instrumented with named counters —
+Step-2 flat-vs-scalar dispatch and requirement-memo reuse, the
+incremental evaluator's Pearce–Kelly rank repairs vs full refreshes,
+Step-4 swap-probe cache hits — so every :class:`SweepPoint` can carry
+the *cache statistics* of its pipeline run (``cache_stats``) next to
+its stage timings.  :func:`snapshot` / :func:`delta` bracket one
+pipeline execution; under the parallel k' sweep each worker process
+accumulates its own counters and ships the per-point delta back inside
+the (picklable) ``SweepPoint``.
+
+Counters only ever *count* — they never influence control flow — so
+instrumentation cannot change scheduling results.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+__all__ = ["COUNTERS", "bump", "snapshot", "delta", "reset"]
+
+COUNTERS: Counter = Counter()
+
+
+def bump(name: str, n: int = 1) -> None:
+    """Increment counter ``name`` by ``n``."""
+    COUNTERS[name] += n
+
+
+def snapshot() -> dict[str, int]:
+    """Current counter values (a detached copy)."""
+    return dict(COUNTERS)
+
+
+def delta(snap: dict[str, int]) -> dict[str, int]:
+    """Counters that moved since ``snap`` (name -> increment)."""
+    return {
+        k: v - snap.get(k, 0)
+        for k, v in COUNTERS.items()
+        if v != snap.get(k, 0)
+    }
+
+
+def reset() -> None:
+    """Zero all counters (test isolation)."""
+    COUNTERS.clear()

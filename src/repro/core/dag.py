@@ -45,6 +45,7 @@ class Workflow:
 
     def __init__(self, n: int = 0, name: str = "workflow") -> None:
         self.name = name
+        self._n_edges = 0
         self.work: list[float] = [0.0] * n
         self.mem: list[float] = [0.0] * n
         # Persistent residency (bytes held for the whole execution —
@@ -75,6 +76,13 @@ class Workflow:
     def add_edge(self, u: int, v: int, cost: float = 1.0) -> None:
         if u == v:
             raise ValueError(f"self loop on task {u}")
+        if v not in self.succ[u]:
+            self._n_edges += 1
+        elif getattr(self, "_flat_cache", None) is not None:
+            # accumulating onto an existing edge changes costs without
+            # moving (n, n_edges) — the flat CSR view's validity guard
+            # cannot see it, so drop the view explicitly
+            self._flat_cache = None
         self.succ[u][v] = self.succ[u].get(v, 0.0) + float(cost)
         self.pred[v][u] = self.pred[v].get(u, 0.0) + float(cost)
 
@@ -87,7 +95,13 @@ class Workflow:
 
     @property
     def n_edges(self) -> int:
-        return sum(len(s) for s in self.succ)
+        """Distinct edge count, maintained by :meth:`add_edge` (O(1)).
+
+        Hot path: the flat-array Step-2 view and the partitioner's
+        locality-order cache guard their validity on ``(n, n_edges)``
+        per call, so this must not rescan the adjacency.
+        """
+        return self._n_edges
 
     def parents(self, u: int) -> Iterable[int]:
         return self.pred[u].keys()

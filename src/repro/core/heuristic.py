@@ -37,6 +37,16 @@ the min-peak traversal search.  Step 4 prunes the O(V²) swap scan to
 pairs touching the critical path — a swap leaving every current
 maximum chain untouched cannot lower the makespan — with an optional
 exhaustive verification scan after convergence.
+
+Three further layers close the ROADMAP's 30k hot-spot list (PR 5, see
+``docs/architecture.md``): Step 2's block constants and ready-heap run
+on flat numpy arrays (:mod:`repro.core.memdag`, bit-identical to the
+scalar path); committed merges maintain topological ranks via
+Pearce–Kelly localized reordering with a rank-window-bounded
+acyclicity probe (:class:`IncrementalEvaluator`); and Step-4 rescans
+reuse probe verdicts whose dependency region the applied swap did not
+touch (see :func:`_swap_pass`).  All are observable through
+``ScheduleReport.cache_stats``.
 """
 from __future__ import annotations
 
@@ -46,6 +56,7 @@ import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass
 
+from . import counters
 from .baseline import MappingResult
 from .dag import QuotientGraph, Workflow
 from .incremental import IncrementalEvaluator
@@ -115,8 +126,11 @@ def _memo_witness(wf: Workflow, nodes: list[int], exact_limit: int,
     key = tuple(nodes)
     e = memo.get(key)
     if e is None:
+        counters.bump("step2_memo_misses")
         e = block_requirement_witness(wf, nodes, exact_limit=exact_limit)
         memo[key] = e
+    else:
+        counters.bump("step2_memo_hits")
     return e
 
 
@@ -596,6 +610,7 @@ def _swap_pass(
     exhaustive: bool = False,
     full_scan_fallback: bool = True,
     pinned: set[int] | None = None,
+    probe_cache: bool = True,
 ) -> None:
     """Best-improvement swaps, delta-evaluated with rollback.
 
@@ -605,6 +620,23 @@ def _swap_pass(
     that each probe is a delta evaluation instead of a full sweep.
     ``exhaustive=True`` forces full scans throughout (test oracle).
     ``pinned`` blocks (warm-start mode) never swap.
+
+    Dependency-region probe caching (``probe_cache``): rescans after
+    an applied swap re-probe mostly pairs whose verdict cannot have
+    changed.  A "no improvement" probe verdict for pair ``(v, vp)``
+    stays *exactly* reproducible while (a) no vertex whose bottom
+    weight or processor changed lies in the pair's read closure —
+    ``{v, vp}``, their ancestors, and those vertices' children — and
+    (b) the probe's *head* (the untouched vertex whose maintained
+    weight supplied the final max, ``ev.last_probe_head``) kept its
+    value; the improvement bound only ever tightens within a pass, so
+    a cached rejection can never hide a fresh improvement.  After each
+    applied swap the touched region — descendant closure of the
+    changed vertices, the swapped pair and their parents — is stamped,
+    and cached verdicts are reused only when both endpoints (and the
+    head) predate every stamp.  Cache reuse therefore replicates the
+    uncached scan decision-for-decision: final mappings are
+    bit-identical with the cache on or off (property-tested).
     """
     if pinned is None:
         pinned = frozenset()
@@ -613,6 +645,10 @@ def _swap_pass(
     mem_of = [platform.memory(j) for j in range(platform.k)]
     best_ms = ev.makespan()
     full_checked = False
+    verdicts: dict[tuple[int, int], tuple[int, int | None]] = {}
+    inv_stamp: dict[int, int] = {}   # vid -> last scan touching its region
+    l_stamp: dict[int, int] = {}     # vid -> last scan its l changed
+    scan = 0
     while True:
         best_pair: tuple[int, int] | None = None
         run_full = exhaustive or full_checked
@@ -653,17 +689,53 @@ def _swap_pass(
                 continue
             if req_of[vp] > mem_of[pa]:
                 continue
+            key = (v, vp) if v < vp else (vp, v)
+            if probe_cache:
+                ent = verdicts.get(key)
+                if ent is not None:
+                    s, head = ent
+                    if (inv_stamp.get(v, -1) <= s
+                            and inv_stamp.get(vp, -1) <= s
+                            and (head is None
+                                 or l_stamp.get(head, -1) <= s)):
+                        counters.bump("swap_probe_cache_hits")
+                        continue
+            counters.bump("swap_probes")
             ms = ev.probe_swap(v, vp, best_ms - 1e-12)
             if ms is not None:
                 best_ms = ms
                 best_pair = (v, vp)
+                verdicts.pop(key, None)
+            elif probe_cache:
+                verdicts[key] = (scan, ev.last_probe_head)
         if best_pair is None:
             if run_full or not full_scan_fallback:
                 return
             full_checked = True   # pruned neighborhood exhausted: verify
             continue
-        ev.swap(*best_pair)
+        changed = ev.swap_and_changes(*best_pair)
         full_checked = False
+        if probe_cache:
+            scan += 1
+            for x in changed:
+                l_stamp[x] = scan
+            # invalidation region: descendants of everything whose
+            # value or processor moved, plus of the parents of the
+            # value-changed vertices (parents *read* a changed child)
+            seeds = set(changed)
+            seeds.update(best_pair)
+            region = set(seeds)
+            for x in changed:
+                region.update(q.pred[x])
+            stack = list(region)
+            while stack:
+                u = stack.pop()
+                for w in q.succ[u]:
+                    if w not in region:
+                        region.add(w)
+                        stack.append(w)
+            for x in region:
+                inv_stamp[x] = scan
 
 
 def _idle_moves(

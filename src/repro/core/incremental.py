@@ -33,6 +33,14 @@ Invariants
 3.  The makespan is served from a lazy max-heap over ``l``: every
     update pushes, queries pop stale entries.  The heap is compacted
     when it outgrows the live vertex set.
+4.  Topological ranks are maintained *dynamically*: an acyclic merge
+    committed on exact ranks runs a Pearce–Kelly localized reorder
+    (``_pk_repair``) — only the affected region between the merged
+    vertex and its lowest violating child is reassigned — and the
+    acyclicity probe itself is bounded by the same rank window
+    (``_cycle_after_merge``).  Full O(V + E) rank refreshes survive
+    only for merges applied on top of inexact ranks (committed triple
+    merges, whose intermediate state is cyclic).
 
 Transactions
 ------------
@@ -53,6 +61,7 @@ from __future__ import annotations
 import heapq
 from typing import Iterable
 
+from . import counters
 from .dag import QuotientGraph
 from .makespan import bottom_weights, bottom_weights_flat
 from .platform import Platform
@@ -100,6 +109,13 @@ class IncrementalEvaluator:
         self._cp_set: frozenset[int] = frozenset()
         self._top2_version = -1    # high-degree child-term cache tag
         self._top2: dict[int, tuple] = {}
+        #: vertex whose *maintained* bottom weight supplied the
+        #: unchanged-part maximum in the last overlay probe's final
+        #: check — ``None`` when the probe aborted early or returned a
+        #: value.  Step 4's dependency-region verdict cache stores it:
+        #: a cached "no improvement" stays valid while this head's
+        #: value and the pair's ancestor region are untouched.
+        self.last_probe_head: int | None = None
         self.rebuild()
 
     # -------------------------------------------------------------- #
@@ -120,17 +136,20 @@ class IncrementalEvaluator:
         self._version += 1
 
     def refresh_ranks(self) -> None:
-        """Recompute exact topological ranks (O(V + E)).
+        """Recompute exact topological ranks from scratch (O(V + E)).
 
-        Merges approximate the merged vertex's rank (max of its parts),
-        which can break the parent-rank < child-rank invariant for
-        *other* vertices' orderings; propagation stays correct (stale
-        order only re-queues) but bounded probes require exact ranks —
-        with them every vertex is recomputed exactly once per
-        propagation, from settled children, so an intermediate value
-        ``>= bound`` proves the final makespan is too.
+        With the Pearce–Kelly repair (:meth:`_pk_repair`) committed
+        merges keep ranks exact in O(affected region), so this full
+        refresh only runs when exactness was lost some other way —
+        today that is a settled *triple* merge (the intermediate state
+        is cyclic, so no valid ranks exist to repair from).  Bounded
+        probes require exact ranks: every vertex is then recomputed
+        exactly once per propagation, from settled children, so an
+        intermediate value ``>= bound`` proves the final makespan is
+        too.
         """
         assert not self._pending
+        counters.bump("rank_full_refreshes")
         self._rank = {
             v: i for i, v in enumerate(self.q.topological_order_fast())
         }
@@ -228,6 +247,9 @@ class IncrementalEvaluator:
             if op[0] == "proc":
                 _, v, old = op
                 q.proc[v] = old
+            elif op[0] == "ranks":  # Pearce–Kelly repair inside a frame
+                for v, old in op[1]:
+                    self._rank[v] = old
             else:  # ("merge", undo)
                 undo = op[1]
                 self._rank.pop(undo["vm"], None)
@@ -260,6 +282,25 @@ class IncrementalEvaluator:
         pv, pw = self.q.proc[v], self.q.proc[w]
         self.set_proc(v, pw)
         self.set_proc(w, pv)
+
+    def swap_and_changes(self, v: int, w: int) -> list[int]:
+        """:meth:`swap`, returning the vids whose bottom weight moved.
+
+        Step 4's probe-verdict cache needs the *change set* of an
+        applied swap to invalidate only the pairs whose dependency
+        region was touched.  Implemented as a throwaway top-level
+        transaction: the frame journal already records exactly the
+        vertices whose ``l`` changed, and committing at top level
+        discards it without further cost.  (``v``/``w`` themselves may
+        be absent when the swap left every bottom weight unchanged —
+        callers must still treat their *processor* change as a
+        mutation.)
+        """
+        self.begin()
+        self.swap(v, w)
+        changed = list(self._frames[-1].lold)
+        self.commit()
+        return changed
 
     # -------------------------------------------------------------- #
     # bounded probes (Step 4 hot path)
@@ -308,18 +349,22 @@ class IncrementalEvaluator:
         ranks, as for the other probes.
         """
         q = self.q
+        # the rank-windowed cycle probe (not just the bounded overlay)
+        # is only sound on exact ranks — fail loudly, not wrongly
+        assert self._ranks_exact, "probe_merge requires exact ranks"
         # prime the l-derived caches before the structural trial: built
         # mid-trial they would snapshot the merged adjacency under an
         # unchanged version tag and go stale after the unmerge
         self._top2_terms()
         self._values_desc()
+        rv = max(self._rank.get(a, 0), self._rank.get(b, 0))
         vm, undo = q.merge(a, b)
+        self._rank[vm] = rv
         ms: float | None = None
-        if q.cycle_through(vm) is None:
+        if self._cycle_after_merge(vm, rv) is None:
             q.proc[vm] = proc
-            self._rank[vm] = max(self._rank.get(a, 0), self._rank.get(b, 0))
             ms = self._overlay_probe((vm,), bound, removed=(a, b))
-            del self._rank[vm]
+        del self._rank[vm]
         q.unmerge(undo)
         return ms
 
@@ -375,6 +420,7 @@ class IncrementalEvaluator:
                             best = cand
                 new += best
             if new >= bound:
+                self.last_probe_head = None  # abort: bound-independent
                 return None
             if new != l.get(v):
                 overlay[v] = new
@@ -388,11 +434,16 @@ class IncrementalEvaluator:
         # unchanged part: highest maintained value outside the overlay
         # (skipping entries for vertices merged away in this trial)
         ms = max(overlay.values(), default=0.0)
+        head = None
         for val, v in self._values_desc():
             if v not in overlay and v in members:
                 if val > ms:
                     ms = val
+                    head = v
                 break
+        # every overlay value passed the abort check (< bound), so a
+        # final "no improvement" verdict is always head-determined
+        self.last_probe_head = head
         return ms if ms < bound else None
 
     def _values_desc(self) -> list[tuple[float, int]]:
@@ -443,6 +494,16 @@ class IncrementalEvaluator:
         must either resolve the cycle with another merge (Step 3's
         triple merge for 2-cycles) or ``rollback()``.  Bottom weights
         are settled only once Γ is acyclic again.
+
+        When the ranks were exact going in, both the acyclicity check
+        and the rank maintenance are *localized*: the cycle probe DFS
+        is bounded by the affected rank window
+        (:meth:`_cycle_after_merge`) and a Pearce–Kelly repair
+        (:meth:`_pk_repair`) reorders only the affected region, so
+        commits are O(region) instead of O(V + E) and exactness is
+        preserved — the full :meth:`refresh_ranks` only remains for
+        merges applied on top of inexact ranks (e.g. the second leg of
+        a committed triple merge, whose intermediate state is cyclic).
         """
         was_exact = self._ranks_exact
         vm, undo = self.q.merge(a, b)
@@ -453,19 +514,133 @@ class IncrementalEvaluator:
         self._ranks_exact = False
         self._pending.append((vm, a, b))
         self._version += 1
-        cycle = self.q.cycle_through(vm)
+        if was_exact:
+            cycle = self._cycle_after_merge(vm, rv)
+        else:
+            counters.bump("cycle_probe_full_dfs")
+            cycle = self.q.cycle_through(vm)
         if cycle is None:
-            self._settle()
             if was_exact:
-                # Every rewired edge is incident to vm.  Parents keep
-                # rank < max(parts) = rank[vm] automatically; if the
-                # children do too, the old ranks are still a valid
-                # topological order and exactness survives the merge
-                # (O(deg) check — saves a full refresh per commit).
-                rank = self._rank
-                if all(rank.get(w, -1) > rv for w in self.q.succ[vm]):
-                    self._ranks_exact = True
+                # repair before settling: propagation then runs over
+                # exact ranks and recomputes each vertex exactly once
+                self._pk_repair(vm, rv)
+            self._settle()
         return vm, cycle
+
+    # -------------------------------------------------------------- #
+    # localized rank maintenance (Pearce–Kelly)
+    # -------------------------------------------------------------- #
+    def _cycle_after_merge(self, vm: int, rv: int) -> list[int] | None:
+        """A cycle through freshly merged ``vm`` (or ``None``) — the
+        rank-localized version of :meth:`QuotientGraph.cycle_through`.
+
+        Requires the *pre-merge* ranks to be exact.  Every edge not
+        incident to ``vm`` then goes strictly rank-upward, so a path
+        that leaves ``vm`` and returns to it must end in a predecessor
+        of ``vm`` (all of which rank below ``rv = max(rank of the
+        parts)``) and therefore climbs through vertices ranked below
+        ``rv`` only.  The DFS explores exactly that window; on large
+        quotients this is the difference between O(affected region)
+        and the full-graph wander of the generic probe.  2-cycles (the
+        case Step 3 resolves by triple merges) are detected first in
+        O(deg), with the same ``[vm, min]`` representative the generic
+        probe returns; longer cycles are returned as some explicit
+        cycle (callers only branch on the length).
+        """
+        q = self.q
+        succ = q.succ
+        two = succ[vm].keys() & q.pred[vm].keys()
+        if two:
+            counters.bump("cycle_probe_two_cycle")
+            return [vm, min(two)]
+        counters.bump("cycle_probe_ranked")
+        rank = self._rank
+        starts = [w for w in succ[vm] if rank[w] < rv]
+        if not starts:
+            return None
+        preds = q.pred[vm].keys()
+        parent: dict[int, int] = {}
+        seen = set(starts)
+        stack = list(starts)
+        while stack:
+            u = stack.pop()
+            if u in preds:  # path vm -> ... -> u -> vm closes a cycle
+                cycle = [u]
+                while u in parent:
+                    u = parent[u]
+                    cycle.append(u)
+                cycle.append(vm)
+                cycle.reverse()
+                return cycle
+            for w in succ[u]:
+                if w not in seen and rank[w] < rv:
+                    seen.add(w)
+                    parent[w] = u
+                    stack.append(w)
+        return None
+
+    def _pk_repair(self, vm: int, rv: int) -> None:
+        """Pearce–Kelly localized topological reorder after a merge.
+
+        Pre-merge ranks are exact; the merge can only violate order on
+        the edges ``vm -> w`` with ``rank[w] < rv`` (parents keep
+        ``rank < max(parts) = rv`` automatically).  Discovery walks
+        the two affected regions — forward from the violating children
+        through ranks ``< rv``, backward from ``vm`` through ranks
+        ``>= lb`` (the lowest violating child) — and reassigns the
+        union's own rank slots: backward region first, forward region
+        after, each in its previous relative order.  All other
+        vertices keep their ranks, so the repair is O(region); with no
+        violations it degenerates to the O(deg) no-op check.
+
+        Rank *values* are only ever consumed as a topological order
+        (probe scheduling), never compared across runs, so swapping
+        the full refresh for this repair cannot change any scheduling
+        result — property-tested in ``tests/test_incremental.py``.
+        """
+        rank = self._rank
+        q = self.q
+        succ, pred = q.succ, q.pred
+        viol = [w for w in succ[vm] if rank[w] < rv]
+        if not viol:
+            self._ranks_exact = True
+            counters.bump("rank_pk_noops")
+            return
+        lb = min(rank[w] for w in viol)
+        # forward region: violating children + their descendants < rv
+        fwd = list(viol)
+        seen_f = set(viol)
+        stack = list(viol)
+        while stack:
+            u = stack.pop()
+            for w in succ[u]:
+                if w not in seen_f and rank[w] < rv:
+                    seen_f.add(w)
+                    fwd.append(w)
+                    stack.append(w)
+        # backward region: vm + its ancestors ranked >= lb
+        back = [vm]
+        seen_b = {vm}
+        stack = [vm]
+        while stack:
+            u = stack.pop()
+            for w in pred[u]:
+                if w not in seen_b and rank[w] >= lb:
+                    seen_b.add(w)
+                    back.append(w)
+                    stack.append(w)
+        back.sort(key=rank.__getitem__)
+        fwd.sort(key=rank.__getitem__)
+        region = back + fwd
+        slots = sorted(rank[x] for x in region)
+        if self._frames:
+            self._frames[-1].ops.append(
+                ("ranks", [(x, rank[x]) for x in region]))
+        for x, s in zip(region, slots):
+            rank[x] = s
+        self._ranks_exact = True
+        counters.bump("rank_pk_repairs")
+        counters.bump("rank_pk_region_vertices", len(region))
 
     # -------------------------------------------------------------- #
     # internals

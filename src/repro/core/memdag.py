@@ -34,6 +34,9 @@ from __future__ import annotations
 import heapq
 from typing import Sequence
 
+import numpy as np
+
+from . import counters
 from .dag import Workflow
 
 __all__ = [
@@ -44,10 +47,167 @@ __all__ = [
     "greedy_min_peak",
     "block_requirement",
     "block_requirement_witness",
+    "set_step2_impl",
+    "step2_impl",
     "EXACT_LIMIT",
 ]
 
 EXACT_LIMIT = 14
+
+#: Step-2 block-constant implementation: "auto" dispatches large blocks
+#: to the flat-array path and small ones to the scalar path; "scalar" /
+#: "flat" force one side (property tests, benchmarks).  Both paths are
+#: bit-identical (see docs/architecture.md, "Flat-array Step 2").
+_STEP2_IMPL = "auto"
+
+#: blocks below this size stay on the scalar path in "auto" mode — the
+#: numpy call overhead only amortizes once the block's edge volume is
+#: a few cache lines wide (measured crossover ~tens of tasks).
+_FLAT_CUTOVER = 48
+
+
+def set_step2_impl(mode: str) -> str:
+    """Select the Step-2 implementation; returns the previous mode.
+
+    ``"auto"`` (default) uses the flat-array path for blocks of at
+    least ``_FLAT_CUTOVER`` tasks and the scalar path below;
+    ``"scalar"`` / ``"flat"`` force one implementation everywhere.
+    Results are bit-identical in every mode (asserted by
+    ``tests/test_step2_flat.py``); the knob exists for benchmarks
+    (``make bench-large`` records the scalar-vs-flat Step-2 share
+    under ``"step2"`` in ``BENCH_runtime.json``) and property tests.
+    """
+    global _STEP2_IMPL
+    if mode not in ("auto", "scalar", "flat"):
+        raise ValueError(f"unknown Step-2 impl {mode!r}")
+    prev = _STEP2_IMPL
+    _STEP2_IMPL = mode
+    return prev
+
+
+def step2_impl() -> str:
+    """The currently selected Step-2 implementation mode."""
+    return _STEP2_IMPL
+
+
+def _use_flat(n: int) -> bool:
+    """Shared dispatch predicate of the two Step-2 entry points."""
+    if _STEP2_IMPL == "flat":
+        return True
+    return _STEP2_IMPL == "auto" and n >= _FLAT_CUTOVER
+
+
+# ---------------------------------------------------------------------- #
+# flat-array workflow view (Step-2 hot path)
+# ---------------------------------------------------------------------- #
+class _FlatWorkflow:
+    """Immutable CSR snapshot of a workflow plus per-task scratch.
+
+    Step 2's FitBlock recursion prices thousands of blocks of the same
+    workflow; rebuilding per-task ``during``/``delta`` constants from
+    the adjacency dicts per block is the remaining O(E)-per-split cost
+    the ROADMAP names.  This view stores the adjacency once as flat
+    arrays — successor CSR in ``(task ascending, dict insertion)``
+    order, predecessor CSR in ``(task ascending, dict insertion)``
+    order — and computes any block's constants with a handful of
+    vectorized gathers and ``np.bincount`` accumulations.
+
+    Bit-identity: ``np.bincount`` adds its weights sequentially in
+    input order, and the edge lists are gathered in exactly the order
+    the scalar loops visit the dicts, so every per-task float
+    accumulates with the same association as the scalar path.
+
+    ``stamp`` / ``local`` are global per-task vectors reused across
+    blocks (token-stamped membership + local ids): switching blocks is
+    O(block), never O(n) — the "maintain global per-task vectors under
+    FitBlock splits" design.  The shared scratch makes the view
+    single-threaded per Workflow object (like every mutable cache on
+    it); the parallel k' sweep isolates by *process*, never by thread.
+    """
+
+    __slots__ = (
+        "n", "s_indptr", "s_dst", "s_cost", "p_indptr", "p_src",
+        "p_cost", "mem", "out_total", "stamp", "local", "_token",
+    )
+
+    def __init__(self, wf: Workflow) -> None:
+        n = wf.n
+        self.n = n
+        m = wf.n_edges
+        s_indptr = np.zeros(n + 1, dtype=np.int64)
+        s_dst = np.empty(m, dtype=np.int64)
+        s_cost = np.empty(m, dtype=np.float64)
+        k = 0
+        for u in range(n):
+            for v, c in wf.succ[u].items():
+                s_dst[k] = v
+                s_cost[k] = c
+                k += 1
+            s_indptr[u + 1] = k
+        p_indptr = np.zeros(n + 1, dtype=np.int64)
+        p_src = np.empty(m, dtype=np.int64)
+        p_cost = np.empty(m, dtype=np.float64)
+        k = 0
+        for v in range(n):
+            for u, c in wf.pred[v].items():
+                p_src[k] = u
+                p_cost[k] = c
+                k += 1
+            p_indptr[v + 1] = k
+        self.s_indptr, self.s_dst, self.s_cost = s_indptr, s_dst, s_cost
+        self.p_indptr, self.p_src, self.p_cost = p_indptr, p_src, p_cost
+        self.mem = np.asarray(wf.mem, dtype=np.float64)
+        # total outbound volume per task, accumulated in succ-dict
+        # order (bincount is sequential) — matches the scalar loops
+        self.out_total = np.bincount(
+            np.repeat(np.arange(n, dtype=np.int64), np.diff(s_indptr)),
+            weights=s_cost, minlength=n)
+        self.stamp = np.zeros(n, dtype=np.int64)
+        self.local = np.zeros(n, dtype=np.int64)
+        self._token = 0
+
+    def mark(self, nodes: np.ndarray) -> int:
+        """Stamp ``nodes`` as the current block; returns the token."""
+        self._token += 1
+        self.stamp[nodes] = self._token
+        self.local[nodes] = np.arange(len(nodes), dtype=np.int64)
+        return self._token
+
+
+def _flat_view(wf: Workflow) -> _FlatWorkflow:
+    """The workflow's cached :class:`_FlatWorkflow` (built on demand).
+
+    Cache validity is guarded by ``(n, n_edges)`` (both O(1)) like the
+    partitioner's locality-order cache: workflows are static during a
+    scheduling run.  Helpers that rewrite weights of *existing* tasks
+    or edges in place must drop ``wf._flat_cache`` explicitly (the
+    workflow generators do).
+    """
+    cached = getattr(wf, "_flat_cache", None)
+    if cached is not None:
+        n, m, fv = cached
+        if n == wf.n and m == wf.n_edges:
+            return fv
+    fv = _FlatWorkflow(wf)
+    wf._flat_cache = (wf.n, wf.n_edges, fv)
+    return fv
+
+
+def _gather_rows(indptr: np.ndarray, rows: np.ndarray):
+    """``(edge_idx, row_of_edge)`` for the CSR slices of ``rows``.
+
+    ``edge_idx`` concatenates each row's ``indptr`` range in row
+    order; ``row_of_edge[j]`` is the local row index owning edge j.
+    """
+    counts = indptr[rows + 1] - indptr[rows]
+    rep = np.repeat(np.arange(len(rows), dtype=np.int64), counts)
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), rep
+    ends = np.cumsum(counts)
+    idx = np.arange(total, dtype=np.int64) + np.repeat(
+        indptr[rows] - (ends - counts), counts)
+    return idx, rep
 
 
 def _constants(
@@ -142,12 +302,57 @@ def simulate_peak_members(
 ) -> float:
     """Transient peak of executing block ``members`` of ``wf`` in
     ``order`` — ``max`` over the :func:`occupancy_steps` states (see
-    there for the memory model and the unchecked-precedence caveat)."""
+    there for the memory model and the unchecked-precedence caveat).
+
+    ``order`` must cover ``members`` exactly (already an
+    :func:`occupancy_steps` precondition); large blocks dispatch to a
+    flat-array evaluation that is bit-identical to the scalar loop
+    (same accumulation order — see :class:`_FlatWorkflow`).
+    """
+    if _use_flat(len(order)):
+        return _simulate_peak_members_flat(wf, order)
+    counters.bump("step2_scalar_peak_sims")
     peak = 0.0
     for _, during, _ in occupancy_steps(wf, members, order):
         if during > peak:
             peak = during
     return peak
+
+
+def _simulate_peak_members_flat(wf: Workflow, order: Sequence[int]) -> float:
+    """Flat-array :func:`simulate_peak_members` (identical floats).
+
+    ``live`` is the sequential prefix sum of the per-task deltas
+    (``np.cumsum`` accumulates left to right, like the scalar loop)
+    and every per-task constant sums its edge contributions in the
+    scalar visiting order via ``np.bincount``.
+    """
+    counters.bump("step2_flat_peak_sims")
+    nb = len(order)
+    if nb == 0:
+        return 0.0
+    fv = _flat_view(wf)
+    order_arr = np.asarray(order, dtype=np.int64)
+    token = fv.mark(order_arr)
+    pidx, prep = _gather_rows(fv.p_indptr, order_arr)
+    internal_p = fv.stamp[fv.p_src[pidx]] == token
+    pcost = fv.p_cost[pidx]
+    int_in = np.bincount(prep[internal_p], weights=pcost[internal_p],
+                         minlength=nb)
+    ext_in = np.bincount(prep[~internal_p], weights=pcost[~internal_p],
+                         minlength=nb)
+    sidx, srep = _gather_rows(fv.s_indptr, order_arr)
+    internal_s = fv.stamp[fv.s_dst[sidx]] == token
+    int_out = np.bincount(srep[internal_s],
+                          weights=fv.s_cost[sidx][internal_s],
+                          minlength=nb)
+    live = np.empty(nb, dtype=np.float64)
+    live[0] = 0.0
+    if nb > 1:
+        np.cumsum((int_out - int_in)[:-1], out=live[1:])
+    during = ((live + ext_in) + fv.mem[order_arr]) + fv.out_total[order_arr]
+    peak = float(during.max())
+    return peak if peak > 0.0 else 0.0
 
 
 def exact_min_peak(
@@ -259,7 +464,30 @@ def greedy_min_peak_members(
     the subgraph construction).  Avoiding the Workflow materialization
     is what keeps Step 2's recursive splitting and the requirement
     cache misses affordable at 30k tasks.
+
+    Dispatches by block size between two bit-identical
+    implementations (see :func:`set_step2_impl`): the scalar
+    dict-walking reference below and the flat-array path
+    (:func:`_greedy_min_peak_members_flat`) that computes the block
+    constants with vectorized gathers and runs the ready-heap on
+    lexsort ranks.
     """
+    n = len(nodes)
+    if n == 0:
+        return 0.0, []
+    if _use_flat(n):
+        return _greedy_min_peak_members_flat(wf, nodes)
+    return _greedy_min_peak_members_scalar(wf, nodes)
+
+
+def _greedy_min_peak_members_scalar(
+    wf: Workflow,
+    nodes: Sequence[int],
+) -> tuple[float, list[int]]:
+    """Scalar reference implementation of
+    :func:`greedy_min_peak_members` (also the fast path for small
+    blocks, where numpy call overhead dominates)."""
+    counters.bump("step2_scalar_blocks")
     n = len(nodes)
     if n == 0:
         return 0.0, []
@@ -322,6 +550,113 @@ def greedy_min_peak_members(
     # the tie-break keeps (p1, o1) anyway — skip the second run.
     if p1 > max(during):
         p2, o2 = run([(during[i], delta[i], i) for i in range(n)])
+        if p2 < p1:
+            return p2, [nodes[i] for i in o2]
+    return p1, [nodes[i] for i in o1]
+
+
+def _greedy_min_peak_members_flat(
+    wf: Workflow,
+    nodes: Sequence[int],
+) -> tuple[float, list[int]]:
+    """Flat-array :func:`greedy_min_peak_members` (identical results).
+
+    Block constants come from the cached :class:`_FlatWorkflow` CSR
+    view — vectorized gathers + sequential ``np.bincount``
+    accumulation reproduce the scalar float associations exactly — and
+    the ready-heap runs on *lexsort ranks*: each variant's key tuples
+    ``(flag, during, i)`` are ranked once with ``np.lexsort`` (stable,
+    so ties fall back to the local id exactly like the tuple compare)
+    and the heap then holds plain ints.  Pops are strictly by minimum
+    key in both versions, so the traversal — and hence every
+    ``live``/``peak`` float — is bit-identical to the scalar run.
+    """
+    counters.bump("step2_flat_blocks")
+    n = len(nodes)
+    fv = _flat_view(wf)
+    nodes_arr = np.asarray(nodes, dtype=np.int64)
+    token = fv.mark(nodes_arr)
+    # successor-side constants (edge order == scalar scan order)
+    sidx, srep = _gather_rows(fv.s_indptr, nodes_arr)
+    sdst = fv.s_dst[sidx]
+    scost = fv.s_cost[sidx]
+    internal_s = fv.stamp[sdst] == token
+    int_cost = scost[internal_s]
+    int_src = srep[internal_s]
+    int_dst = fv.local[sdst[internal_s]]
+    int_out = np.bincount(int_src, weights=int_cost, minlength=n)
+    ext_out = np.bincount(srep[~internal_s], weights=scost[~internal_s],
+                          minlength=n)
+    # the scalar path accumulates int_in over producers in ``nodes``
+    # order — exactly this (masked) edge sequence
+    int_in = np.bincount(int_dst, weights=int_cost, minlength=n)
+    # predecessor-side constants
+    pidx, prep = _gather_rows(fv.p_indptr, nodes_arr)
+    external_p = fv.stamp[fv.p_src[pidx]] != token
+    ext_in = np.bincount(prep[external_p],
+                         weights=fv.p_cost[pidx][external_p],
+                         minlength=n)
+    during = ((ext_in + fv.mem[nodes_arr]) + int_out) + ext_out
+    delta = int_out - int_in
+    if len(int_cost) == 0:
+        # Edge-free block (common for fan families and late FitBlock
+        # splits): every task is ready from the start, so the heap
+        # degenerates to one sort, ``delta == 0`` everywhere keeps
+        # ``live`` at 0.0, the peak is exactly ``max(during)``, and
+        # the second variant can never beat it (its guard is false).
+        perm = np.lexsort((during, delta >= 0))
+        peak = float(during.max())
+        return (peak if peak > 0.0 else 0.0,
+                [nodes[i] for i in perm.tolist()])
+    indeg0 = np.bincount(int_dst, minlength=n)
+    # local successor CSR (int_src is nondecreasing: grouped by source)
+    lptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(int_src, minlength=n), out=lptr[1:])
+    lptr_l = lptr.tolist()
+    ldst_l = int_dst.tolist()
+    during_l = during.tolist()
+    delta_l = delta.tolist()
+    indeg_l = indeg0.tolist()
+    ready0 = indeg0 == 0
+
+    inf = float("inf")
+
+    def run(perm: np.ndarray, cutoff: float = inf) -> tuple[float, list[int]]:
+        order_of = perm.tolist()
+        rank_of = np.empty(n, dtype=np.int64)
+        rank_of[perm] = np.arange(n, dtype=np.int64)
+        rank_l = rank_of.tolist()
+        deg = list(indeg_l)
+        heap = rank_of[ready0].tolist()
+        heapq.heapify(heap)
+        live = peak = 0.0
+        order: list[int] = []
+        heappush, heappop = heapq.heappush, heapq.heappop
+        while heap:
+            i = order_of[heappop(heap)]
+            d = live + during_l[i]
+            if d > peak:
+                peak = d
+                if peak >= cutoff:
+                    # a traversal's peak only grows: this variant can
+                    # no longer beat the incumbent — abort (the caller
+                    # discards the partial order on peak >= cutoff)
+                    return peak, order
+            live += delta_l[i]
+            order.append(i)
+            for j in ldst_l[lptr_l[i]:lptr_l[i + 1]]:
+                deg[j] -= 1
+                if deg[j] == 0:
+                    heappush(heap, rank_l[j])
+        return peak, order
+
+    # variant 1: memory-freeing tasks first, then smallest footprint
+    # (np.lexsort: last key is primary; stability supplies the id tie)
+    p1, o1 = run(np.lexsort((during, delta >= 0)))
+    if p1 > float(during.max()):
+        # variant 2: smallest transient footprint outright, aborted as
+        # soon as it provably cannot beat variant 1
+        p2, o2 = run(np.lexsort((delta, during)), cutoff=p1)
         if p2 < p1:
             return p2, [nodes[i] for i in o2]
     return p1, [nodes[i] for i in o1]

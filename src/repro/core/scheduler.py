@@ -44,6 +44,7 @@ from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field, replace
 from typing import Callable, Protocol, Sequence, runtime_checkable
 
+from . import counters
 from .baseline import MappingResult, _pack_min_peak
 from .dag import Workflow, build_quotient
 from .heuristic import (
@@ -85,7 +86,14 @@ __all__ = [
 @dataclass
 class SweepPoint:
     """One k' attempt of the sweep (k' is ``None`` for sweep-free
-    pipelines such as the baseline's single packing run)."""
+    pipelines such as the baseline's single packing run).
+
+    ``cache_stats`` carries the pipeline run's perf-cache counters
+    (:mod:`repro.core.counters` deltas: Step-2 flat/scalar dispatch and
+    memo reuse, Pearce–Kelly rank repairs vs full refreshes, Step-4
+    swap-probe cache hits) — collected per attempt so the parallel
+    sweep's per-worker counters aggregate correctly.
+    """
 
     k_prime: int | None
     makespan: float | None
@@ -95,6 +103,7 @@ class SweepPoint:
     failed_stage: str | None = None
     fail_reason: str | None = None
     memory_gap: float | None = None
+    cache_stats: dict[str, int] = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {
@@ -106,6 +115,7 @@ class SweepPoint:
             "failed_stage": self.failed_stage,
             "fail_reason": self.fail_reason,
             "memory_gap": self.memory_gap,
+            "cache_stats": dict(self.cache_stats),
         }
 
     @classmethod
@@ -122,7 +132,18 @@ class Infeasibility:
     requirement-minus-capacity deficit observed across the whole sweep
     (how much more memory would have been needed, ``None`` when every
     failure was structural rather than a raw capacity shortfall);
-    ``smallest_kprime`` is the smallest k' attempted.
+    ``smallest_kprime`` is the smallest k' attempted (``None`` for
+    sweep-free runs: the baseline's single packing attempt and
+    warm-start replans).
+
+    Warm-start replans (``algorithm="warm_start"``, produced by
+    :meth:`Scheduler.resume` and the scenario policies) report through
+    the same type: ``stage`` may then also be ``"warm_start"`` (an
+    inherited block no longer fits its surviving processor) or
+    ``"materialize"`` (blocks left unassigned, e.g. the no-replan
+    policy after a failure event).  Scenario timelines surface the
+    diagnosis per planning segment and in the migration log of their
+    :class:`repro.scenario.TimelineReport`.
     """
 
     algorithm: str
@@ -201,6 +222,16 @@ class ScheduleReport:
     carries the live :class:`MappingResult` on feasible runs; it is
     deliberately excluded from JSON and equality (``from_json`` yields
     a report with ``best=None`` but an otherwise identical record).
+
+    ``stage_times`` and ``cache_stats`` aggregate over the whole sweep
+    (per-attempt values live on the :class:`SweepPoint`\\ s):
+    ``cache_stats`` exposes the perf-cache counters of the run —
+    ``step2_flat_blocks`` / ``step2_scalar_blocks`` /
+    ``step2_memo_hits`` (flat-array Step 2 and the requirement memo),
+    ``rank_pk_repairs`` / ``rank_full_refreshes`` (Pearce–Kelly
+    dynamic topological ranks), ``swap_probe_cache_hits`` /
+    ``swap_probes`` (Step-4 dependency-region verdict reuse) — see
+    docs/benchmarks.md for the full key list.
     """
 
     algorithm: str
@@ -211,6 +242,7 @@ class ScheduleReport:
     total_time_s: float
     workers: int
     truncated: bool = False
+    cache_stats: dict[str, int] = field(default_factory=dict)
     best: MappingResult | None = field(
         default=None, repr=False, compare=False)
 
@@ -239,9 +271,23 @@ class ScheduleReport:
             "total_time_s": self.total_time_s,
             "workers": self.workers,
             "truncated": self.truncated,
+            "cache_stats": dict(self.cache_stats),
         }
 
     def to_json(self, **kw) -> str:
+        """Serialize the report record to JSON.
+
+        Covers everything except ``best`` (the live mapping does not
+        round-trip; ``from_json`` restores an otherwise identical
+        report with ``best=None``) — so the summary's block/processor
+        maps, the sweep trace, stage timings and cache stats all
+        survive.  Scenario runs embed these serialized reports
+        per planning segment inside a
+        :class:`repro.scenario.TimelineReport`, next to that report's
+        own ``timeline`` (stitched event segments) and migration log —
+        deserializing a timeline reconstructs each segment's
+        ``ScheduleReport`` through :meth:`from_dict` unchanged.
+        """
         return json.dumps(self.to_dict(), **kw)
 
     @classmethod
@@ -257,6 +303,7 @@ class ScheduleReport:
             total_time_s=d["total_time_s"],
             workers=d.get("workers", 1),
             truncated=d.get("truncated", False),
+            cache_stats=dict(d.get("cache_stats", {})),
         )
 
     @classmethod
@@ -675,11 +722,18 @@ class SchedulerConfig:
 
 @dataclass(frozen=True)
 class _RunSpec:
-    """The picklable subset of the config a worker needs."""
+    """The picklable subset of the config a worker needs.
+
+    ``step2_impl`` snapshots the process-global Step-2 dispatch mode
+    (:func:`repro.core.memdag.set_step2_impl`) at spec-creation time so
+    spawn-based worker pools (no fork: the global would reset to
+    "auto" on re-import) honour a forced mode too.
+    """
 
     stage_names: tuple[str, ...]
     exact_limit: int
     sim_options: dict | None = None
+    step2_impl: str = "auto"
 
 
 # ---------------------------------------------------------------------- #
@@ -694,6 +748,7 @@ def _execute_pipeline(
     resume: "ResumeState | None" = None,
 ) -> tuple[MappingResult | None, SweepPoint]:
     t_run = time.perf_counter()
+    snap = counters.snapshot()
     ctx = StageContext(wf=wf, platform=platform, k_prime=kp,
                        exact_limit=spec.exact_limit, memo=memo,
                        sim_options=spec.sim_options, resume=resume)
@@ -710,17 +765,20 @@ def _execute_pipeline(
     # trailing SimulateStage already materialized it when enabled)
     _materialize_result(ctx, kp)
     dt = time.perf_counter() - t_run
+    cache_stats = counters.delta(snap)
     if ctx.result is not None:
         ctx.result.runtime_s = dt
         point = SweepPoint(k_prime=kp, makespan=float(ctx.result.makespan),
                            feasible=True, time_s=dt,
-                           stage_times=stage_times)
+                           stage_times=stage_times,
+                           cache_stats=cache_stats)
     else:
         point = SweepPoint(k_prime=kp, makespan=None, feasible=False,
                            time_s=dt, stage_times=stage_times,
                            failed_stage=ctx.failure.stage,
                            fail_reason=ctx.failure.reason,
-                           memory_gap=ctx.failure.gap)
+                           memory_gap=ctx.failure.gap,
+                           cache_stats=cache_stats)
     return ctx.result, point
 
 
@@ -741,10 +799,13 @@ _WORKER_STATE: dict = {}
 
 
 def _pool_init(wf: Workflow, platform: Platform, spec: _RunSpec) -> None:
+    from .memdag import set_step2_impl
+
     _WORKER_STATE["wf"] = wf
     _WORKER_STATE["platform"] = platform
     _WORKER_STATE["spec"] = spec
     _WORKER_STATE["memo"] = {}
+    set_step2_impl(spec.step2_impl)  # no-op on fork, needed on spawn
 
 
 def _make_pool(wf: Workflow, platform: Platform, spec: _RunSpec,
@@ -857,8 +918,10 @@ class Scheduler:
         """Run the configured pipeline; always a :class:`ScheduleReport`."""
         cfg = self.config
         t0 = time.perf_counter()
+        from .memdag import step2_impl
+
         spec = _RunSpec(self.stage_names(), cfg.exact_limit,
-                        cfg.sim_options)
+                        cfg.sim_options, step2_impl())
         sweep = self.sweep_values(wf, platform)
         callbacks: list[Callable[[SweepPoint], None]] = []
         if cfg.verbose:
@@ -926,9 +989,12 @@ class Scheduler:
 
         total = time.perf_counter() - t0
         stage_times: dict[str, float] = {}
+        cache_stats: dict[str, int] = {}
         for p in points:
             for name, dt in p.stage_times.items():
                 stage_times[name] = stage_times.get(name, 0.0) + dt
+            for name, c in p.cache_stats.items():
+                cache_stats[name] = cache_stats.get(name, 0) + c
 
         if best is not None:
             best.runtime_s = total  # whole-sweep time, as dag_het_part did
@@ -946,6 +1012,7 @@ class Scheduler:
             total_time_s=total,
             workers=cfg.workers,
             truncated=truncated,
+            cache_stats=cache_stats,
             best=best,
         )
 
@@ -969,7 +1036,10 @@ class Scheduler:
         names = self._filter_toggles(
             cfg.stages if cfg.stages is not None
             else PIPELINES["warm_start"])
-        spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options)
+        from .memdag import step2_impl
+
+        spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options,
+                        step2_impl())
         res, point = _execute_pipeline(state.wf, state.platform, spec,
                                        None, {}, resume=state)
         for cb in ([_default_printer] if cfg.verbose else []) + (
@@ -991,6 +1061,7 @@ class Scheduler:
             stage_times=dict(point.stage_times),
             total_time_s=total,
             workers=1,
+            cache_stats=dict(point.cache_stats),
             best=res,
         )
 
@@ -1017,5 +1088,14 @@ class Scheduler:
 def schedule(wf: Workflow, platform: Platform,
              config: SchedulerConfig | None = None,
              **overrides) -> ScheduleReport:
-    """One-call convenience: ``Scheduler(config, **kw).schedule(...)``."""
+    """One-call convenience: ``Scheduler(config, **kw).schedule(...)``.
+
+    Keyword overrides are :class:`SchedulerConfig` fields — commonly
+    ``algorithm=``, ``kprime=``, ``workers=``, ``simulate=`` and
+    ``sim_options=`` (the keyword dict handed to the simulate stage:
+    ``comm=``, ``jitter=``, ``replicas=``, ``memory=``, ...)::
+
+        schedule(wf, platform, simulate=True,
+                 sim_options={"comm": "fair-share"}).sim
+    """
     return Scheduler(config, **overrides).schedule(wf, platform)

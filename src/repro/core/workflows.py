@@ -255,6 +255,7 @@ def random_weights(
             c = float(rng.uniform(*edge_range))
             wf.succ[u][v] = c
             wf.pred[v][u] = c
+    wf._flat_cache = None  # weights changed in place: drop the CSR view
     return wf
 
 
@@ -274,6 +275,7 @@ def scale_memory_to_platform(wf: Workflow, platform: Platform) -> Workflow:
         for v in list(wf.succ[u]):
             wf.succ[u][v] *= f
             wf.pred[v][u] *= f
+    wf._flat_cache = None  # weights changed in place: drop the CSR view
     return wf
 
 
@@ -323,6 +325,7 @@ def real_like_workflows(seed: int = 0) -> list[Workflow]:
                 c = float(rng.uniform(1, 8))
                 wf.succ[u][v] = c
                 wf.pred[v][u] = c
+        wf._flat_cache = None  # weights rewritten in place (see _flat_view)
         out.append(wf)
     return out
 

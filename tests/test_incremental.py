@@ -246,6 +246,153 @@ class TestSwapPassPruning:
             assert results[0] == pytest.approx(results[1])
 
 
+def _assert_ranks_exact_topological(ev: IncrementalEvaluator) -> None:
+    """The maintained ranks are a strict topological order of Γ."""
+    q = ev.q
+    ranks = {v: ev._rank[v] for v in q.members}
+    assert len(set(ranks.values())) == len(ranks), "duplicate ranks"
+    for u in q.members:
+        for w in q.succ[u]:
+            assert ranks[u] < ranks[w], f"rank order violated on {u}->{w}"
+
+
+class TestDynamicRanks:
+    """Pearce–Kelly localized rank maintenance (ROADMAP hot spot #3).
+
+    *Rank equivalence*: PK repairs and a full refresh may assign
+    different rank values, but both must (a) be strict topological
+    orders of Γ and (b) make bounded probes return identical verdicts
+    — rank values are consumed only as a processing order, never
+    compared across runs.
+    """
+
+    def test_pk_keeps_ranks_exact_across_random_merges(self):
+        checked = 0
+        for seed in range(25):
+            platform = make_platform(k=6, seed=seed)
+            q = make_quotient(36 + seed % 13, 7 + seed % 4, seed)
+            ev = IncrementalEvaluator(q, platform)
+            rng = random.Random(seed * 13 + 5)
+            for _ in range(12):
+                mutate_once(ev, platform, rng)
+                if ev._ranks_exact:  # triple merges may drop exactness
+                    _assert_ranks_exact_topological(ev)
+                    checked += 1
+                ev.assert_consistent()
+        assert checked >= 150
+
+    def test_pk_equivalent_to_full_refresh(self):
+        """Probe verdicts under PK ranks == after a forced refresh."""
+        for seed in range(12):
+            platform = make_platform(k=5, seed=seed)
+            q = make_quotient(30, 6, seed)
+            ev = IncrementalEvaluator(q, platform)
+            rng = random.Random(seed + 77)
+            for _ in range(8):
+                mutate_once(ev, platform, rng)
+            ev.ensure_exact_ranks()
+            _assert_ranks_exact_topological(ev)
+            verts = sorted(q.members)
+            bound = ev.makespan() + 1.0
+            pk_probes = [ev.probe_swap(v, w, bound)
+                         for v in verts[:6] for w in verts[-6:] if v != w]
+            ev.refresh_ranks()  # discard PK ranks for fresh exact ones
+            _assert_ranks_exact_topological(ev)
+            fresh = [ev.probe_swap(v, w, bound)
+                     for v in verts[:6] for w in verts[-6:] if v != w]
+            assert pk_probes == fresh
+
+    def test_pk_rollback_restores_ranks_exactly(self):
+        for seed in range(15):
+            platform = make_platform(k=4, seed=seed)
+            q = make_quotient(28, 6, seed)
+            ev = IncrementalEvaluator(q, platform)
+            rng = random.Random(seed * 3 + 1)
+            for _ in range(25):
+                verts = sorted(q.members)
+                if len(verts) < 3:
+                    break
+                before_ranks = dict(ev._rank)
+                before_exact = ev._ranks_exact
+                a, b = rng.sample(verts, 2)
+                ev.begin()
+                ev.merge(a, b)  # may run an in-frame PK repair
+                ev.rollback()
+                assert ev._rank == before_ranks
+                assert ev._ranks_exact == before_exact
+                ev.assert_consistent()
+
+    def test_localized_cycle_probe_matches_generic(self):
+        """_cycle_after_merge's verdict == QuotientGraph.cycle_through
+        (and the 2-cycle representative is identical)."""
+        agree = cycles = 0
+        for seed in range(20):
+            platform = make_platform(k=4, seed=seed)
+            q = make_quotient(30, 7, seed)
+            ev = IncrementalEvaluator(q, platform)
+            rng = random.Random(seed + 11)
+            verts = sorted(q.members)
+            for _ in range(20):
+                a, b = rng.sample(verts, 2)
+                rv = max(ev._rank[a], ev._rank[b])
+                vm, undo = q.merge(a, b)
+                ev._rank[vm] = rv
+                ranked = ev._cycle_after_merge(vm, rv)
+                generic = q.cycle_through(vm)
+                assert (ranked is None) == (generic is None)
+                if ranked is not None:
+                    cycles += 1
+                    if len(generic) == 2:
+                        assert ranked == generic
+                del ev._rank[vm]
+                q.unmerge(undo)
+                agree += 1
+        assert agree >= 300 and cycles >= 5
+
+
+class TestSwapProbeCache:
+    """Step-4 dependency-region verdict caching (ROADMAP hot spot #4):
+    the cached pass must make bit-identical swap decisions."""
+
+    def test_cache_on_off_bit_identical(self):
+        from repro.core.heuristic import _Requirements, _swap_pass
+
+        for seed in range(40):
+            outcomes = []
+            for use_cache in (False, True):
+                platform = make_platform(k=6, seed=seed)
+                q = make_quotient(30 + seed % 11, 6 + seed % 4, seed)
+                rng = random.Random(seed)
+                for v in sorted(q.members):
+                    q.proc[v] = rng.randrange(platform.k)
+                wf = q.wf
+                reqs = _Requirements(wf, 0)
+                ev = IncrementalEvaluator(q, platform)
+                _swap_pass(wf, platform, q, reqs, ev,
+                           probe_cache=use_cache)
+                outcomes.append((ev.makespan(), dict(q.proc)))
+            assert outcomes[0] == outcomes[1]
+
+    def test_cache_hits_recorded_on_real_instance(self):
+        from repro.core import counters, default_cluster, \
+            generate_workflow, schedule
+
+        plat = default_cluster()
+        wf = generate_workflow("epigenomics", 600, seed=2, platform=plat)
+        snap = counters.snapshot()
+        rep = schedule(wf, plat, kprime=[9, 19])
+        assert rep.feasible
+        moved = counters.delta(snap)
+        assert rep.cache_stats.get("swap_probes", 0) \
+            == moved.get("swap_probes", 0)
+        # Step 3 merged on this instance and PK kept every committed
+        # merge on the localized path (no full refresh)
+        assert moved.get("rank_pk_noops", 0) \
+            + moved.get("rank_pk_repairs", 0) > 0
+        assert moved.get("rank_full_refreshes", 0) == 0
+        assert moved.get("swap_probe_cache_hits", 0) > 0
+
+
 @pytest.mark.slow
 def test_end_to_end_large_instance():
     """The scheduler completes and validates on a mid-size instance."""

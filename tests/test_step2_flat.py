@@ -1,0 +1,183 @@
+"""Flat-array Step 2 vs the scalar reference — bit-identity properties.
+
+The flat-array path (:mod:`repro.core.memdag`, ``_FlatWorkflow``) must
+reproduce the scalar implementation *exactly*: identical peaks,
+identical traversal orders, identical FitBlock split points — the
+scheduler's bit-identical-makespan anchor (PR 1/PR 3) rests on it.
+These tests drive both implementations over random subDAGs, random
+block subsets and full FitBlock split sequences and compare with
+``==``, never ``approx``.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import default_cluster, generate_workflow, schedule
+from repro.core.dag import Workflow
+from repro.core.heuristic import _biggest_assign
+from repro.core.memdag import (
+    _greedy_min_peak_members_flat,
+    _greedy_min_peak_members_scalar,
+    _simulate_peak_members_flat,
+    greedy_min_peak_members,
+    occupancy_steps,
+    set_step2_impl,
+    simulate_peak_members,
+    step2_impl,
+)
+
+from conftest import make_random_dag
+
+
+@pytest.fixture(autouse=True)
+def _restore_impl():
+    prev = step2_impl()
+    yield
+    set_step2_impl(prev)
+
+
+@st.composite
+def dag_and_block(draw):
+    """A random DAG plus a random non-empty ascending block of it."""
+    n = draw(st.integers(2, 120))
+    seed = draw(st.integers(0, 10_000))
+    p = draw(st.sampled_from([0.05, 0.15, 0.35]))
+    wf = make_random_dag(n, seed, p=p)
+    rng = random.Random(seed ^ 0xBEEF)
+    size = rng.randint(1, n)
+    nodes = sorted(rng.sample(range(n), size))
+    return wf, nodes
+
+
+class TestGreedyFlatVsScalar:
+    @settings(max_examples=60, deadline=None)
+    @given(dag_and_block())
+    def test_peak_and_order_bit_identical(self, case):
+        wf, nodes = case
+        ps, os_ = _greedy_min_peak_members_scalar(wf, nodes)
+        pf, of_ = _greedy_min_peak_members_flat(wf, nodes)
+        assert ps == pf          # exact float equality, not approx
+        assert os_ == of_        # identical traversal, task by task
+
+    @settings(max_examples=40, deadline=None)
+    @given(dag_and_block())
+    def test_peak_sim_bit_identical(self, case):
+        wf, nodes = case
+        _, order = _greedy_min_peak_members_scalar(wf, nodes)
+        members = set(nodes)
+        scalar = 0.0
+        for _, during, _ in occupancy_steps(wf, members, order):
+            if during > scalar:
+                scalar = during
+        assert _simulate_peak_members_flat(wf, order) == scalar
+
+    def test_dispatch_modes_agree(self):
+        wf = make_random_dag(90, 7, p=0.2)
+        nodes = list(range(90))
+        out = {}
+        for mode in ("scalar", "flat", "auto"):
+            set_step2_impl(mode)
+            out[mode] = greedy_min_peak_members(wf, nodes)
+            assert simulate_peak_members(wf, set(nodes), out[mode][1]) \
+                == simulate_peak_members(wf, set(nodes), out["scalar"][1])
+        assert out["scalar"] == out["flat"] == out["auto"]
+
+    def test_set_step2_impl_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            set_step2_impl("simd")
+
+    def test_flat_cache_survives_and_tracks_edits(self):
+        wf = make_random_dag(60, 3, p=0.2)
+        nodes = list(range(60))
+        _greedy_min_peak_members_flat(wf, nodes)
+        assert wf._flat_cache is not None
+        cached_view = wf._flat_cache[2]
+        # structural growth invalidates via the (n, n_edges) guard:
+        # the stale CSR view is rebuilt and results track the scalar
+        # path on the *edited* workflow (node 0 gained an ext output)
+        u = wf.add_task(work=1.0, mem=2.0)
+        wf.add_edge(0, u, 5.0)
+        second = _greedy_min_peak_members_flat(wf, sorted(nodes + [u]))
+        assert wf._flat_cache[2] is not cached_view
+        assert second == _greedy_min_peak_members_scalar(
+            wf, sorted(nodes + [u]))
+        assert _greedy_min_peak_members_flat(wf, nodes) \
+            == _greedy_min_peak_members_scalar(wf, nodes)
+
+
+class TestSplitSequences:
+    """FitBlock's recursive bisection must pick identical split points
+    (hence identical assigned/unassigned block sets) on both paths."""
+
+    def _step2(self, wf, platform, kprime, mode):
+        from repro.core.partitioner import acyclic_partition
+
+        set_step2_impl(mode)
+        assignment = acyclic_partition(wf, kprime)
+        groups = {}
+        for u, b in enumerate(assignment):
+            groups.setdefault(b, []).append(u)
+        blocks = [groups[b] for b in sorted(groups)]
+        return _biggest_assign(wf, platform, blocks, exact_limit=0,
+                               memo={})
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(0, 500), st.integers(2, 6))
+    def test_biggest_assign_bit_identical(self, seed, kprime):
+        plat = default_cluster()
+        wf = generate_workflow("montage", 300, seed=seed, platform=plat)
+        a = self._step2(wf, plat, kprime, "scalar")
+        b = self._step2(wf, plat, kprime, "flat")
+        assert a.assigned == b.assigned    # same blocks, same processors
+        assert a.unassigned == b.unassigned
+
+    @pytest.mark.parametrize("family", ["epigenomics", "blast", "soykb"])
+    def test_full_pipeline_makespan_identical(self, family):
+        plat = default_cluster()
+        wf = generate_workflow(family, 400, seed=3, platform=plat)
+        out = {}
+        for mode in ("scalar", "flat"):
+            set_step2_impl(mode)
+            rep = schedule(wf, plat, algorithm="dag_het_part",
+                           kprime=[1, 3, 7])
+            out[mode] = (rep.makespan,
+                         rep.summary.block_of_task,
+                         sorted(rep.summary.proc_of_block.items()))
+        assert out["scalar"] == out["flat"]
+
+
+class TestFlatCacheInvalidation:
+    def test_existing_edge_accumulation_drops_stale_view(self):
+        wf = make_random_dag(60, 9, p=0.25)
+        nodes = list(range(60))
+        _greedy_min_peak_members_flat(wf, nodes)
+        stale_view = wf._flat_cache[2]
+        # accumulate onto an existing edge: (n, n_edges) both unchanged,
+        # so only the explicit add_edge invalidation protects the view
+        u = next(u for u in range(60) if wf.succ[u])
+        v = next(iter(wf.succ[u]))
+        wf.add_edge(u, v, 123.0)
+        assert wf._flat_cache is None  # stale CSR view dropped
+        after_flat = _greedy_min_peak_members_flat(wf, nodes)
+        assert wf._flat_cache[2] is not stale_view
+        assert after_flat == _greedy_min_peak_members_scalar(wf, nodes)
+
+
+class TestWorkflowEdgeCount:
+    def test_n_edges_maintained(self):
+        wf = Workflow(4)
+        assert wf.n_edges == 0
+        wf.add_edge(0, 1, 1.0)
+        wf.add_edge(1, 2, 1.0)
+        assert wf.n_edges == 2
+        wf.add_edge(0, 1, 2.5)   # duplicate: accumulates, not a new edge
+        assert wf.n_edges == 2
+        assert wf.succ[0][1] == pytest.approx(3.5)
+        u = wf.add_task()
+        wf.add_edge(2, u)
+        assert wf.n_edges == 3
