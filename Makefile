@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: verify test fast bench bench-large bench-sweep bench-sim \
-	bench-scenario bench-step2 docs-check
+	bench-scenario bench-step1 bench-step2 docs-check
 
 # tier-1 verification (ROADMAP.md) + executable-docs check
 verify:
@@ -37,6 +37,11 @@ bench-large:
 # -> BENCH_runtime.json ("step2")
 bench-step2:
 	python -m benchmarks.bench_runtime --step2
+
+# scalar-vs-flat-vs-multilevel Step-1 partition comparison at
+# n = 30000 / 100000 -> BENCH_runtime.json ("step1")
+bench-step1:
+	python -m benchmarks.bench_runtime --step1
 
 # parallel-vs-serial k' sweep on the n=1000 suite -> BENCH_runtime.json
 bench-sweep:

@@ -16,7 +16,11 @@ Step-2 comparison on the n=1000 suite (``make bench-step2``): each
 family is scheduled once with the scalar Step-2 implementation forced
 and once with the flat-array dispatch (the default), makespans are
 asserted bit-identical, and per-family assign-stage ("Step-2 share")
-plus end-to-end wall clocks land under the ``step2`` tier.  All tiers
+plus end-to-end wall clocks land under the ``step2`` tier.  ``--step1``
+runs the scalar-vs-flat-vs-multilevel Step-1 partition comparison at
+n=30000/100000 (``make bench-step1``), asserting scalar and flat
+produce identical block lists and recording edge-cut counters plus
+speedups against the embedded PR-5 baseline clocks.  All tiers
 append their results to ``BENCH_runtime.json`` so the perf trajectory
 is tracked across PRs (the file maps tier -> per-size aggregate plus
 per-family rows; it is rewritten after every size group so a partial
@@ -31,7 +35,12 @@ import sys
 import time
 from pathlib import Path
 
-from repro.core import default_cluster, real_like_workflows, schedule
+from repro.core import (
+    default_cluster,
+    generate_workflow,
+    real_like_workflows,
+    schedule,
+)
 
 from .common import KPRIME, emit, geomean, run_pair, workflow_suite
 
@@ -217,6 +226,98 @@ def run_step2(sizes=(1000,), seeds=(1,), write_json: bool = True) -> dict:
     return tier_out
 
 
+# Step-1 wall clocks of the PR-5 code, measured once on this container
+# (seed=1, same instances as run_step1) before the flat partitioner
+# landed — the fixed "before" anchor for the vs_pr5 columns.
+PR5_STEP1_BASELINE_S = {
+    30000: {"genome": 0.933, "blast": 0.971, "bwa": 1.079,
+            "epigenomics": 0.820, "montage": 0.754,
+            "seismology": 0.864, "soykb": 0.736},
+    100000: {"blast": 1.161, "epigenomics": 1.182},
+}
+
+
+def run_step1(write_json: bool = True) -> dict:
+    """Scalar-vs-flat-vs-multilevel Step 1 comparison (``--step1``).
+
+    Times the raw partition sweep (no downstream stages — Step 1 is
+    what this tier isolates) per family with the scalar implementation
+    forced, with the flat dispatch (the production default, asserted
+    bit-identical block lists), and with the opt-in multilevel mode, at
+    n=30000 (full k' grid) and n=100000 (k' subset, two families).
+    Cut sizes come from the ``step1_cut_before/after`` counters; the
+    ``vs_pr5`` columns compare against the embedded PR-5 wall clocks.
+    Results land under the ``step1`` tier of ``BENCH_runtime.json``.
+    """
+    from repro.core import counters
+    from repro.core.partitioner import (
+        acyclic_partition,
+        set_step1_impl,
+        step1_impl,
+    )
+
+    plat = default_cluster()
+    results = _load_results()
+    tier_out = results.setdefault("step1", {})
+    prev_impl = step1_impl()
+    cases = ((30000, None, KPRIME),
+             (100000, ("blast", "epigenomics"), (2, 9, 36)))
+    try:
+        for n, only, kprime in cases:
+            rows: list[dict] = []
+            instances = (
+                workflow_suite(plat, (n,), (1,)) if only is None
+                else ((f, n, 1, generate_workflow(f, n, seed=1,
+                                                  platform=plat))
+                      for f in only))
+            for family, _n, seed, wf in instances:
+                row: dict = {"family": family, "seed": seed}
+                set_step1_impl("scalar")
+                t0 = time.perf_counter()
+                ref = [acyclic_partition(wf, k) for k in kprime]
+                row["scalar_s"] = time.perf_counter() - t0
+                set_step1_impl("auto")
+                snap = counters.snapshot()
+                t0 = time.perf_counter()
+                flat = [acyclic_partition(wf, k) for k in kprime]
+                row["flat_s"] = time.perf_counter() - t0
+                d = counters.delta(snap)
+                assert flat == ref, (
+                    f"flat Step 1 diverged on {family} n={n}"
+                )
+                row["cut_before"] = d.get("step1_cut_before", 0)
+                row["cut_after"] = d.get("step1_cut_after", 0)
+                snap = counters.snapshot()
+                t0 = time.perf_counter()
+                acyclic_partition(wf, kprime[-1], multilevel=True)
+                row["multilevel_s"] = time.perf_counter() - t0
+                d = counters.delta(snap)
+                row["ml_coarsen_levels"] = d.get("step1_coarsen_levels", 0)
+                row["flat_speedup"] = row["scalar_s"] / row["flat_s"]
+                base = PR5_STEP1_BASELINE_S.get(n, {}).get(family)
+                if base:
+                    row["pr5_baseline_s"] = base
+                    row["vs_pr5_speedup"] = base / row["flat_s"]
+                emit(f"step1/n={n}/{family}/flat_speedup",
+                     row["flat_speedup"], "x;identical_blocks")
+                emit(f"step1/n={n}/{family}/vs_pr5_speedup",
+                     row.get("vs_pr5_speedup", float("nan")), "x")
+                rows.append(row)
+                tier_out[f"n={n}"] = {
+                    "kprime": list(kprime),
+                    "families": rows,
+                    "flat_speedup_geomean": geomean(
+                        [r["flat_speedup"] for r in rows]),
+                    "vs_pr5_speedup_geomean": geomean(
+                        [r.get("vs_pr5_speedup") for r in rows]),
+                }
+                if write_json:
+                    _write_results(results)
+    finally:
+        set_step1_impl(prev_impl)
+    return tier_out
+
+
 if __name__ == "__main__":
     if "--large" in sys.argv:
         run(sizes=(10000, 30000), seeds=(1,), tier="large")
@@ -225,6 +326,8 @@ if __name__ == "__main__":
         run_step2(sizes=(1000, 30000), seeds=(1,))
     elif "--step2" in sys.argv:
         run_step2()
+    elif "--step1" in sys.argv:
+        run_step1()
     elif "--sweep" in sys.argv:
         run_sweep()
     else:

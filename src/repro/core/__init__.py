@@ -53,8 +53,8 @@ sweep trace (``to_json``/``from_json`` for benchmark artifacts).  The
 legacy :func:`dag_het_part` / :func:`dag_het_mem` entry points are
 deprecated thin wrappers over it.
 
-Scaling (30k-task instances)
-----------------------------
+Scaling (30k–1M-task instances)
+-------------------------------
 All four ROADMAP hot spots are closed: the k' sweep parallelizes
 (PR 2); Step 2 runs on flat numpy arrays — a cached CSR view of the
 workflow with token-stamped per-task vectors computes every block's
@@ -64,9 +64,15 @@ committed Step-3 merges keep topological ranks exact through
 Pearce–Kelly localized reordering, which also bounds the merge
 acyclicity probe to the affected rank window; and Step-4 rescans reuse
 probe verdicts whose dependency region an applied swap did not touch.
-Every layer is decision-for-decision identical to the scalar/uncached
-paths (property-tested); ``make bench-large`` records the before/after
-under ``"step2"`` in ``BENCH_runtime.json``.  Design notes in
+Step 1 rides the same pattern (:func:`set_step1_impl`, default
+``"auto"``): refinement replays the scalar move sequence over the
+shared CSR view behind an exact vectorized gain/legality prefilter,
+and an opt-in multilevel mode (``SchedulerConfig(step1_multilevel=
+True)``) coarsens by acyclic heavy-edge matching so n=100k–1M
+partitions complete in seconds.  Every layer is decision-for-decision
+identical to the scalar/uncached paths (property-tested); ``make
+bench-large`` / ``make bench-step1`` record the before/after under
+``"step2"`` / ``"step1"`` in ``BENCH_runtime.json``.  Design notes in
 ``docs/architecture.md``.
 
 Simulation
@@ -163,7 +169,13 @@ from .memdag import (
     simulate_peak_members,
     step2_impl,
 )
-from .partitioner import acyclic_partition, edge_cut, partition_block
+from .partitioner import (
+    acyclic_partition,
+    edge_cut,
+    partition_block,
+    set_step1_impl,
+    step1_impl,
+)
 from .baseline import MappingResult, dag_het_mem, validate_mapping
 from .heuristic import dag_het_part, kprime_sweep_values
 from .scheduler import (
@@ -197,6 +209,7 @@ __all__ = [
     "set_step2_impl", "step2_impl",
     "simulate_peak", "simulate_peak_members",
     "acyclic_partition", "edge_cut", "partition_block",
+    "set_step1_impl", "step1_impl",
     "MappingResult", "dag_het_mem", "dag_het_part", "validate_mapping",
     "Scheduler", "SchedulerConfig", "ScheduleReport", "SweepPoint",
     "Infeasibility", "MappingSummary", "ResumeState", "Stage", "schedule",

@@ -1,9 +1,13 @@
 """Lightweight global perf counters for the scheduling hot paths.
 
 The scheduler's pipeline stages are instrumented with named counters —
-Step-2 flat-vs-scalar dispatch and requirement-memo reuse, the
-incremental evaluator's Pearce–Kelly rank repairs vs full refreshes,
-Step-4 swap-probe cache hits — so every :class:`SweepPoint` can carry
+Step-1 partitioner dispatch and refinement work (``step1_scalar_calls``
+/ ``step1_flat_calls`` / ``step1_multilevel_calls``, ``step1_moves``,
+``step1_passes``, ``step1_coarsen_levels``, ``step1_cut_before`` /
+``step1_cut_after``), Step-2 flat-vs-scalar dispatch and
+requirement-memo reuse, the incremental evaluator's Pearce–Kelly rank
+repairs vs full refreshes, Step-4 swap-probe cache hits — so every
+:class:`SweepPoint` can carry
 the *cache statistics* of its pipeline run (``cache_stats``) next to
 its stage timings.  :func:`snapshot` / :func:`delta` bracket one
 pipeline execution; under the parallel k' sweep each worker process

@@ -46,6 +46,12 @@ class Workflow:
     def __init__(self, n: int = 0, name: str = "workflow") -> None:
         self.name = name
         self._n_edges = 0
+        # Monotone mutation counter: bumped by every add_task/add_edge
+        # so per-instance caches (the partitioner's locality-order
+        # cache) can detect *any* edit, including same-shape ones —
+        # accumulating cost onto an existing edge moves neither n nor
+        # n_edges, which a (n, n_edges) guard alone cannot see.
+        self._version = 0
         self.work: list[float] = [0.0] * n
         self.mem: list[float] = [0.0] * n
         # Persistent residency (bytes held for the whole execution —
@@ -65,6 +71,7 @@ class Workflow:
                  label: str | None = None,
                  persistent: float = 0.0) -> int:
         u = len(self.work)
+        self._version += 1
         self.work.append(float(work))
         self.mem.append(float(mem))
         self.persistent.append(float(persistent))
@@ -76,6 +83,7 @@ class Workflow:
     def add_edge(self, u: int, v: int, cost: float = 1.0) -> None:
         if u == v:
             raise ValueError(f"self loop on task {u}")
+        self._version += 1
         if v not in self.succ[u]:
             self._n_edges += 1
         elif getattr(self, "_flat_cache", None) is not None:

@@ -45,7 +45,11 @@ scalar path); committed merges maintain topological ranks via
 Pearce–Kelly localized reordering with a rank-window-bounded
 acyclicity probe (:class:`IncrementalEvaluator`); and Step-4 rescans
 reuse probe verdicts whose dependency region the applied swap did not
-touch (see :func:`_swap_pass`).  All are observable through
+touch (see :func:`_swap_pass`).  Step 1 follows in PR 6: refinement
+replays the scalar move sequence over the same cached CSR view behind
+a vectorized prefilter, with an opt-in multilevel
+coarsen→partition→uncoarsen mode for n ≥ 100k
+(:mod:`repro.core.partitioner`).  All are observable through
 ``ScheduleReport.cache_stats``.
 """
 from __future__ import annotations

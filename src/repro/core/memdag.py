@@ -177,11 +177,15 @@ class _FlatWorkflow:
 def _flat_view(wf: Workflow) -> _FlatWorkflow:
     """The workflow's cached :class:`_FlatWorkflow` (built on demand).
 
-    Cache validity is guarded by ``(n, n_edges)`` (both O(1)) like the
-    partitioner's locality-order cache: workflows are static during a
-    scheduling run.  Helpers that rewrite weights of *existing* tasks
-    or edges in place must drop ``wf._flat_cache`` explicitly (the
-    workflow generators do).
+    Shared by Step 2 and the Step-1 flat partitioner (its CSR edge
+    order *is* the scalar iteration order, which is what makes the
+    replayed float accumulations bit-identical).  Cache validity is
+    guarded by ``(n, n_edges)`` (both O(1)): workflows are static
+    during a scheduling run, and :meth:`Workflow.add_edge` drops the
+    view explicitly when it accumulates onto an existing edge (the one
+    mutation this guard cannot see).  Helpers that rewrite weights of
+    *existing* tasks or edges in place must do the same (the workflow
+    generators do).
     """
     cached = getattr(wf, "_flat_cache", None)
     if cached is not None:

@@ -377,6 +377,7 @@ class StageContext:
     sim_options: dict | None = None         # simulate-stage kwargs
     resume: ResumeState | None = None       # warm_start-stage input
     pinned: set[int] = field(default_factory=set)  # vids frozen in place
+    step1_multilevel: bool = False          # multilevel Step-1 opt-in
 
 
 @runtime_checkable
@@ -401,7 +402,8 @@ class PartitionStage:
     toggle = None
 
     def run(self, ctx: StageContext) -> None:
-        assignment = acyclic_partition(ctx.wf, ctx.k_prime)
+        assignment = acyclic_partition(ctx.wf, ctx.k_prime,
+                                       multilevel=ctx.step1_multilevel)
         groups: dict[int, list[int]] = {}
         for u, b in enumerate(assignment):
             groups.setdefault(b, []).append(u)
@@ -718,22 +720,32 @@ class SchedulerConfig:
     stages: Sequence[str] | None = None
     simulate: bool = False
     sim_options: dict | None = None
+    #: opt into multilevel Step-1 partitioning (coarsen → partition →
+    #: uncoarsen).  Changes cuts — hence makespans — by design, so it is
+    #: never on implicitly; the bit-identical scalar/flat dispatch knob
+    #: lives in :func:`repro.core.partitioner.set_step1_impl` instead.
+    step1_multilevel: bool = False
 
 
 @dataclass(frozen=True)
 class _RunSpec:
     """The picklable subset of the config a worker needs.
 
-    ``step2_impl`` snapshots the process-global Step-2 dispatch mode
-    (:func:`repro.core.memdag.set_step2_impl`) at spec-creation time so
-    spawn-based worker pools (no fork: the global would reset to
-    "auto" on re-import) honour a forced mode too.
+    ``step2_impl`` / ``step1_impl`` snapshot the process-global
+    dispatch modes (:func:`repro.core.memdag.set_step2_impl`,
+    :func:`repro.core.partitioner.set_step1_impl`) at spec-creation
+    time so spawn-based worker pools (no fork: the globals would reset
+    to "auto" on re-import) honour a forced mode too;
+    ``step1_multilevel`` carries the config's multilevel Step-1 opt-in
+    into every pipeline run the same way.
     """
 
     stage_names: tuple[str, ...]
     exact_limit: int
     sim_options: dict | None = None
     step2_impl: str = "auto"
+    step1_impl: str = "auto"
+    step1_multilevel: bool = False
 
 
 # ---------------------------------------------------------------------- #
@@ -751,7 +763,8 @@ def _execute_pipeline(
     snap = counters.snapshot()
     ctx = StageContext(wf=wf, platform=platform, k_prime=kp,
                        exact_limit=spec.exact_limit, memo=memo,
-                       sim_options=spec.sim_options, resume=resume)
+                       sim_options=spec.sim_options, resume=resume,
+                       step1_multilevel=spec.step1_multilevel)
     stage_times: dict[str, float] = {}
     for name in spec.stage_names:
         stage = get_stage(name)
@@ -800,12 +813,14 @@ _WORKER_STATE: dict = {}
 
 def _pool_init(wf: Workflow, platform: Platform, spec: _RunSpec) -> None:
     from .memdag import set_step2_impl
+    from .partitioner import set_step1_impl
 
     _WORKER_STATE["wf"] = wf
     _WORKER_STATE["platform"] = platform
     _WORKER_STATE["spec"] = spec
     _WORKER_STATE["memo"] = {}
     set_step2_impl(spec.step2_impl)  # no-op on fork, needed on spawn
+    set_step1_impl(spec.step1_impl)
 
 
 def _make_pool(wf: Workflow, platform: Platform, spec: _RunSpec,
@@ -919,9 +934,11 @@ class Scheduler:
         cfg = self.config
         t0 = time.perf_counter()
         from .memdag import step2_impl
+        from .partitioner import step1_impl
 
         spec = _RunSpec(self.stage_names(), cfg.exact_limit,
-                        cfg.sim_options, step2_impl())
+                        cfg.sim_options, step2_impl(), step1_impl(),
+                        cfg.step1_multilevel)
         sweep = self.sweep_values(wf, platform)
         callbacks: list[Callable[[SweepPoint], None]] = []
         if cfg.verbose:
@@ -1037,9 +1054,10 @@ class Scheduler:
             cfg.stages if cfg.stages is not None
             else PIPELINES["warm_start"])
         from .memdag import step2_impl
+        from .partitioner import step1_impl
 
         spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options,
-                        step2_impl())
+                        step2_impl(), step1_impl(), cfg.step1_multilevel)
         res, point = _execute_pipeline(state.wf, state.platform, spec,
                                        None, {}, resume=state)
         for cb in ([_default_printer] if cfg.verbose else []) + (

@@ -1,0 +1,223 @@
+"""Flat-array Step 1 vs the scalar reference — bit-identity properties.
+
+The flat partitioner (:mod:`repro.core.partitioner`) replays the scalar
+FM move sequence over the shared CSR view behind a vectorized
+gain/legality prefilter, so the single-level result must match the
+scalar path with ``==`` — identical block lists, decision for decision.
+The multilevel path deliberately changes cuts (it is opt-in), so it is
+tested against the partition *invariants* instead: acyclic quotient,
+topologically ordered block ids, coverage, compact ids, determinism.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    build_quotient,
+    default_cluster,
+    generate_workflow,
+    schedule,
+)
+from repro.core import counters
+from repro.core.partitioner import (
+    _acyclic_partition_flat,
+    _acyclic_partition_scalar,
+    _locality_topo_order,
+    acyclic_partition,
+    edge_cut,
+    partition_block,
+    set_step1_impl,
+    step1_impl,
+)
+from conftest import make_random_dag
+
+FAMILIES = ["genome", "blast", "bwa", "epigenomics",
+            "montage", "seismology", "soykb"]
+
+
+@pytest.fixture(autouse=True)
+def _restore_impl():
+    prev = step1_impl()
+    yield
+    set_step1_impl(prev)
+
+
+def assert_partition_invariants(wf, block_of, k):
+    """The contract of acyclic_partition, mode-independent."""
+    assert len(block_of) == wf.n
+    k_eff = max(block_of) + 1
+    assert k_eff <= k
+    assert sorted(set(block_of)) == list(range(k_eff))  # compact ids
+    for u in range(wf.n):
+        for v in wf.succ[u]:
+            assert block_of[u] <= block_of[v]
+    assert build_quotient(wf, block_of).is_acyclic()
+
+
+class TestBitIdentity:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_families_scalar_equals_flat(self, family):
+        wf = generate_workflow(family, 1000, seed=7)
+        for k in (1, 2, 7, 36):
+            a = _acyclic_partition_scalar(wf, k, 0.2, 4)
+            b = _acyclic_partition_flat(wf, k, 0.2, 4)
+            assert a == b  # exact list equality, never approx
+            assert_partition_invariants(wf, a, k)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(2, 150), st.integers(0, 10_000),
+           st.sampled_from([0.05, 0.15, 0.35]),
+           st.sampled_from([2, 3, 5, 9]))
+    def test_random_dags_scalar_equals_flat(self, n, seed, p, k):
+        wf = make_random_dag(n, seed, p=p)
+        a = _acyclic_partition_scalar(wf, k, 0.2, 4)
+        b = _acyclic_partition_flat(wf, k, 0.2, 4)
+        assert a == b
+        assert_partition_invariants(wf, a, k)
+
+    def test_dispatch_modes_agree(self):
+        wf = make_random_dag(600, 11, p=0.02)
+        out = {}
+        for mode in ("scalar", "flat", "auto"):
+            set_step1_impl(mode)
+            out[mode] = acyclic_partition(wf, 5)
+        assert out["scalar"] == out["flat"] == out["auto"]
+
+    def test_partition_block_modes_agree(self):
+        wf = generate_workflow("montage", 800, seed=3)
+        rng = random.Random(5)
+        nodes = sorted(rng.sample(range(wf.n), wf.n - 50))
+        out = {}
+        for mode in ("scalar", "flat"):
+            set_step1_impl(mode)
+            out[mode] = partition_block(wf, nodes, 4)
+        assert out["scalar"] == out["flat"]
+
+    def test_set_step1_impl_rejects_unknown_and_returns_prev(self):
+        with pytest.raises(ValueError):
+            set_step1_impl("simd")
+        assert set_step1_impl("scalar") == "auto"
+        assert set_step1_impl("flat") == "scalar"
+        assert step1_impl() == "flat"
+
+
+class TestMultilevel:
+    @pytest.mark.parametrize("family", ["blast", "montage", "epigenomics"])
+    @pytest.mark.parametrize("k", [4, 9])
+    def test_invariants_and_determinism(self, family, k):
+        wf = generate_workflow(family, 1500, seed=2)
+        a = acyclic_partition(wf, k, multilevel=True)
+        assert_partition_invariants(wf, a, k)
+        assert a == acyclic_partition(wf, k, multilevel=True)
+
+    def test_balance_within_split_slack(self):
+        # clusters are weight-capped at total/k, so no *non-final*
+        # block can exceed the split threshold by more than one cluster
+        wf = generate_workflow("bwa", 1500, seed=4)
+        k = 6
+        block_of = acyclic_partition(wf, k, multilevel=True)
+        total = sum(wf.work) or float(wf.n)
+        k_eff = max(block_of) + 1
+        weights = [0.0] * k_eff
+        for u, b in enumerate(block_of):
+            weights[b] += wf.work[u] or 1.0
+        bound = 1.2 * total / k_eff + total / k + 1e-9
+        assert all(w <= bound for w in weights[:-1])
+
+    def test_small_graphs_fall_through_to_single_level(self):
+        wf = make_random_dag(100, 3, p=0.2)
+        assert acyclic_partition(wf, 4, multilevel=True) \
+            == acyclic_partition(wf, 4)
+
+    def test_counters_track_coarsening(self):
+        # chain-rich family: heavy-edge matching actually contracts
+        # (star-shaped families like blast stall — one pair per hub)
+        wf = generate_workflow("bwa", 1500, seed=2)
+        counters.reset()
+        acyclic_partition(wf, 4, multilevel=True)
+        snap = counters.snapshot()
+        assert snap.get("step1_multilevel_calls") == 1
+        assert snap.get("step1_coarsen_levels", 0) >= 1
+        assert "step1_cut_before" in snap and "step1_cut_after" in snap
+        assert snap["step1_cut_after"] <= snap["step1_cut_before"]
+
+
+class TestFullPipeline:
+    @pytest.mark.parametrize("family", ["epigenomics", "blast", "soykb"])
+    def test_schedule_bit_identical_across_modes(self, family):
+        plat = default_cluster()
+        wf = generate_workflow(family, 1000, seed=3, platform=plat)
+        out = {}
+        for mode in ("scalar", "flat"):
+            set_step1_impl(mode)
+            rep = schedule(wf, plat, algorithm="dag_het_part",
+                           kprime=[1, 3, 7])
+            out[mode] = (rep.makespan,
+                         rep.summary.block_of_task,
+                         sorted(rep.summary.proc_of_block.items()))
+        assert out["scalar"] == out["flat"]
+
+    def test_multilevel_config_produces_valid_schedule(self):
+        plat = default_cluster()
+        wf = generate_workflow("blast", 1500, seed=1, platform=plat)
+        rep = schedule(wf, plat, algorithm="dag_het_part",
+                       kprime=[4], step1_multilevel=True)
+        assert rep.feasible
+        assert rep.makespan > 0
+        block_of = rep.summary.block_of_task
+        assert build_quotient(wf, block_of).is_acyclic()
+        assert rep.cache_stats.get("step1_multilevel_calls", 0) >= 1
+
+    def test_step1_counters_in_cache_stats(self):
+        plat = default_cluster()
+        wf = generate_workflow("seismology", 1000, seed=5, platform=plat)
+        rep = schedule(wf, plat, algorithm="dag_het_part", kprime=[4])
+        stats = rep.cache_stats
+        assert stats.get("step1_flat_calls", 0) >= 1  # auto → flat at n=1000
+        assert "step1_cut_before" in stats and "step1_cut_after" in stats
+
+
+class TestEdgeCutAndCaches:
+    def test_edge_cut_vectorized_matches_scalar_sum(self):
+        wf = make_random_dag(200, 9, p=0.3)   # ~6000 edges → CSR path
+        assert wf.n_edges >= 2048
+        block_of = acyclic_partition(wf, 5)
+        expected = 0.0
+        for u in range(wf.n):
+            for v, c in wf.succ[u].items():
+                if block_of[u] != block_of[v]:
+                    expected += c
+        assert edge_cut(wf, block_of) == pytest.approx(expected, rel=1e-12)
+
+    def test_locality_cache_invalidated_by_version_bump(self):
+        wf = make_random_dag(80, 1, p=0.2)
+        order = _locality_topo_order(wf)
+        cached = wf._locality_order_cache
+        # accumulate onto an existing edge: (n, n_edges) both unchanged,
+        # only the _version component of the key notices the mutation
+        u = next(u for u in range(80) if wf.succ[u])
+        v = next(iter(wf.succ[u]))
+        wf.add_edge(u, v, 42.0)
+        order2 = _locality_topo_order(wf)
+        assert wf._locality_order_cache is not cached
+        assert order2 == order  # same topology → same order, recomputed
+        pos = {t: i for i, t in enumerate(order2)}
+        for a in range(wf.n):
+            for b in wf.succ[a]:
+                assert pos[a] < pos[b]
+
+    def test_flat_partition_reuses_csr_lists_cache(self):
+        wf = generate_workflow("genome", 1000, seed=1)
+        set_step1_impl("flat")
+        acyclic_partition(wf, 4)
+        cached = wf._step1_lists_cache
+        acyclic_partition(wf, 7)
+        assert wf._step1_lists_cache is cached  # same fv → same lists
+        wf.add_edge(0, wf.add_task(work=1.0, mem=1.0), 2.0)
+        acyclic_partition(wf, 4)
+        assert wf._step1_lists_cache is not cached
