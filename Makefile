@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: verify test fast bench bench-large bench-sweep bench-sim \
-	bench-scenario bench-step1 bench-step2 docs-check
+	bench-scenario bench-service bench-step1 bench-step2 docs-check
 
 # tier-1 verification (ROADMAP.md) + executable-docs check
 verify:
@@ -55,3 +55,8 @@ bench-sim:
 # degradation vs failure time -> BENCH_runtime.json ("scenario")
 bench-scenario:
 	python -m benchmarks.bench_scenario
+
+# multi-tenant service: plan-cache speedup + makespan premium, burst
+# throughput/latency/replan counters -> BENCH_runtime.json ("service")
+bench-service:
+	python -m benchmarks.bench_service

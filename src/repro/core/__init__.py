@@ -20,11 +20,18 @@ heterogeneous platforms (Kulagina, Meyerhenke, Benoit — ICPP'24):
 * :mod:`repro.core.counters` — perf-cache counters surfaced as
   ``ScheduleReport.cache_stats``.
 
+Layered on top: :mod:`repro.sim` (discrete-event execution),
+:mod:`repro.scenario` (platform timelines + pause/replan/stitch) and
+:mod:`repro.service` (continuous multi-workflow operation — the
+service loop drives ``Scheduler.seeded`` for plan-cache hits and
+``Scheduler.resume`` for event-driven warm replans).
+
 Start with the top-level ``README.md`` for the quickstart and
 subsystem map; ``docs/architecture.md`` covers the pipeline-stage
-registry, the warm-start flow and the scaling machinery, and
-``docs/benchmarks.md`` the ``BENCH_runtime.json`` schema.  All code
-fences in those documents are executable (``make docs-check``).
+registry, the warm-start flow, the service layer and the scaling
+machinery, and ``docs/benchmarks.md`` the ``BENCH_runtime.json``
+schema.  All code fences in those documents are executable
+(``make docs-check``).
 
 Scheduling API
 --------------
@@ -191,6 +198,7 @@ from .scheduler import (
 )
 from .workflows import (
     FAMILIES,
+    WorkflowValidationError,
     generate_workflow,
     random_layered_dag,
     real_like_workflows,
@@ -216,4 +224,5 @@ __all__ = [
     "kprime_sweep_values",
     "FAMILIES", "generate_workflow", "real_like_workflows",
     "random_layered_dag", "residual_workflow",
+    "WorkflowValidationError",
 ]

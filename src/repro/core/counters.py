@@ -12,7 +12,16 @@ the *cache statistics* of its pipeline run (``cache_stats``) next to
 its stage timings.  :func:`snapshot` / :func:`delta` bracket one
 pipeline execution; under the parallel k' sweep each worker process
 accumulates its own counters and ships the per-point delta back inside
-the (picklable) ``SweepPoint``.
+the (picklable) ``SweepPoint``.  The service layer
+(:mod:`repro.service`) counts through the same registry — job
+lifecycle (``service_admissions`` / ``service_dispatches`` /
+``service_completions`` / ``service_rejections`` /
+``service_infeasible``), contention (``service_deferrals`` /
+``service_displacements``), event handling (``service_replans`` /
+``service_replan_cold_fallbacks``) and plan-cache traffic
+(``service_cache_hits`` / ``service_cache_misses`` /
+``service_cache_stores`` / ``service_seed_fallbacks``) — surfaced as
+``ServiceReport.cache_stats``.
 
 Counters only ever *count* — they never influence control flow — so
 instrumentation cannot change scheduling results.

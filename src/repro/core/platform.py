@@ -267,6 +267,15 @@ def tpu_fleet(
         spec = {"v5e": 224, "v4": 24, "v5e-degraded": 8}
     procs = []
     for kind, count in spec.items():
+        if kind not in _TPU_KINDS:
+            raise ValueError(
+                f"unknown TPU kind {kind!r}; known kinds: "
+                f"{sorted(_TPU_KINDS)}"
+            )
+        if not isinstance(count, int) or count < 0:
+            raise ValueError(
+                f"TPU kind {kind!r} needs a count >= 0, got {count!r}"
+            )
         base = _TPU_KINDS[kind]
         procs.extend(
             replace(base, name=f"{base.name}-{i}") for i in range(count)

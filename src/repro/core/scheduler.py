@@ -378,6 +378,7 @@ class StageContext:
     resume: ResumeState | None = None       # warm_start-stage input
     pinned: set[int] = field(default_factory=set)  # vids frozen in place
     step1_multilevel: bool = False          # multilevel Step-1 opt-in
+    seed_blocks: list[list[int]] | None = None  # seed_partition-stage input
 
 
 @runtime_checkable
@@ -408,6 +409,46 @@ class PartitionStage:
         for u, b in enumerate(assignment):
             groups.setdefault(b, []).append(u)
         ctx.blocks = [groups[b] for b in sorted(groups)]
+
+
+class SeedPartitionStage:
+    """Step-1 replacement for plan-cache hits: adopt a previously
+    computed partition instead of re-running the edge-cut optimizer.
+
+    The seed is a *block list* over the same task ids (typically a
+    cached winner's ``MappingSummary.block_of_task`` regrouped by
+    :meth:`Scheduler.seeded`).  Downstream stages are unchanged —
+    Step 2 re-prices and re-assigns the seeded blocks against the
+    *actual* platform, Step 3 repairs anything that no longer fits and
+    Step 4 refines — so a stale seed degrades gracefully into a
+    slightly worse plan or a structured failure, never a wrong one.
+    """
+
+    name = "seed_partition"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        blocks = ctx.seed_blocks
+        if blocks is None:
+            raise ValueError(
+                "seed_partition stage needs seed blocks "
+                "(use Scheduler.seeded)"
+            )
+        seen: list[int] = [0] * ctx.wf.n
+        for nodes in blocks:
+            for u in nodes:
+                if not 0 <= u < ctx.wf.n or seen[u]:
+                    raise ValueError(
+                        f"seed partition does not bijectively cover "
+                        f"task ids 0..{ctx.wf.n - 1} (task {u})"
+                    )
+                seen[u] = 1
+        if not all(seen):
+            raise ValueError(
+                f"seed partition leaves {seen.count(0)} task(s) "
+                "uncovered"
+            )
+        ctx.blocks = [list(nodes) for nodes in blocks if nodes]
 
 
 class AssignStage:
@@ -668,7 +709,7 @@ def register_pipeline(algorithm: str, stage_names: Sequence[str]) -> None:
 
 for _stage in (PartitionStage(), AssignStage(), MergeStage(),
                SwapStage(), IdleMoveStage(), PackStage(),
-               SimulateStage(), WarmStartStage()):
+               SimulateStage(), WarmStartStage(), SeedPartitionStage()):
     register_stage(_stage)
 register_pipeline("dag_het_part",
                   ("partition", "assign", "merge", "swap", "idle_moves",
@@ -678,6 +719,10 @@ register_pipeline("dag_het_mem", ("pack", "simulate"))
 register_pipeline("warm_start",
                   ("warm_start", "merge", "swap", "idle_moves",
                    "simulate"))
+# Scheduler.seeded: adopt a cached partition, then Steps 2-4 as usual.
+register_pipeline("seeded",
+                  ("seed_partition", "assign", "merge", "swap",
+                   "idle_moves", "simulate"))
 
 
 # ---------------------------------------------------------------------- #
@@ -758,13 +803,15 @@ def _execute_pipeline(
     kp: int | None,
     memo: dict,
     resume: "ResumeState | None" = None,
+    seed_blocks: list[list[int]] | None = None,
 ) -> tuple[MappingResult | None, SweepPoint]:
     t_run = time.perf_counter()
     snap = counters.snapshot()
     ctx = StageContext(wf=wf, platform=platform, k_prime=kp,
                        exact_limit=spec.exact_limit, memo=memo,
                        sim_options=spec.sim_options, resume=resume,
-                       step1_multilevel=spec.step1_multilevel)
+                       step1_multilevel=spec.step1_multilevel,
+                       seed_blocks=seed_blocks)
     stage_times: dict[str, float] = {}
     for name in spec.stage_names:
         stage = get_stage(name)
@@ -1073,6 +1120,70 @@ class Scheduler:
             infeas = self._diagnose(names, [point], algorithm="warm_start")
         return ScheduleReport(
             algorithm="warm_start",
+            summary=summary,
+            infeasibility=infeas,
+            sweep=[point],
+            stage_times=dict(point.stage_times),
+            total_time_s=total,
+            workers=1,
+            cache_stats=dict(point.cache_stats),
+            best=res,
+        )
+
+    # -------------------------------------------------------------- #
+    def seeded(self, wf: Workflow, platform: Platform,
+               block_of_task: Sequence[int],
+               k_prime: int | None = None) -> ScheduleReport:
+        """Plan-cache seeding hook: schedule ``wf`` starting from a
+        previously computed partition instead of the k' sweep.
+
+        ``block_of_task`` is a per-task block id (the shape stored by
+        :class:`MappingSummary` — ids need not be contiguous); blocks
+        are regrouped in ascending-id order and fed through the
+        ``seeded`` pipeline (``seed_partition → assign → merge → swap →
+        idle_moves → simulate``), so Step 2 re-prices the seed against
+        the *actual* platform and Steps 3–4 repair and refine it.  No
+        k' sweep — that is what a cache hit buys, exactly as
+        :meth:`resume` skips it after a failure.  ``k_prime`` is
+        recorded on the single :class:`SweepPoint` for diagnostics
+        (conventionally the cached winner's value).  Always returns a
+        :class:`ScheduleReport` (``algorithm="seeded"``); a seed that
+        no longer fits is a structured infeasibility, not an error.
+        """
+        if len(block_of_task) != wf.n:
+            raise ValueError(
+                f"block_of_task has {len(block_of_task)} entries for "
+                f"{wf.n} tasks"
+            )
+        groups: dict[int, list[int]] = {}
+        for u, b in enumerate(block_of_task):
+            groups.setdefault(int(b), []).append(u)
+        seed = [groups[b] for b in sorted(groups)]
+        cfg = self.config
+        t0 = time.perf_counter()
+        names = self._filter_toggles(
+            cfg.stages if cfg.stages is not None
+            else PIPELINES["seeded"])
+        from .memdag import step2_impl
+        from .partitioner import step1_impl
+
+        spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options,
+                        step2_impl(), step1_impl(), cfg.step1_multilevel)
+        res, point = _execute_pipeline(wf, platform, spec,
+                                       k_prime, {}, seed_blocks=seed)
+        for cb in ([_default_printer] if cfg.verbose else []) + (
+                [cfg.on_sweep_result] if cfg.on_sweep_result else []):
+            cb(point)
+        total = time.perf_counter() - t0
+        if res is not None:
+            res.runtime_s = total
+            summary = MappingSummary.from_result(res)
+            infeas = None
+        else:
+            summary = None
+            infeas = self._diagnose(names, [point], algorithm="seeded")
+        return ScheduleReport(
+            algorithm="seeded",
             summary=summary,
             infeasibility=infeas,
             sweep=[point],

@@ -32,6 +32,7 @@ __all__ = [
     "random_layered_dag",
     "to_json",
     "from_json",
+    "WorkflowValidationError",
 ]
 
 FAMILIES = (
@@ -456,6 +457,41 @@ def to_json(wf: Workflow, *, indent: int | None = None) -> str:
     return json.dumps(doc, indent=indent)
 
 
+class WorkflowValidationError(ValueError):
+    """Structured :func:`from_json` rejection: what is wrong, where.
+
+    ``code`` is a stable machine-readable kind (``"bad-json"``,
+    ``"bad-schema"``, ``"duplicate-task-id"``, ``"dangling-edge"``,
+    ``"self-loop"``, ``"cycle"``, ``"bad-weight"``), ``where`` names
+    the offending record (task/file id) when there is one.  The service
+    admission path turns this into a ``Rejection`` — malformed
+    submissions must never crash the event loop.
+    """
+
+    def __init__(self, code: str, detail: str,
+                 where: str | None = None) -> None:
+        self.code = code
+        self.detail = detail
+        self.where = where
+        at = f" at {where!r}" if where is not None else ""
+        super().__init__(f"[{code}]{at}: {detail}")
+
+
+def _checked_weight(value: object, key: str,
+                    where: str) -> float:
+    try:
+        x = float(value)  # type: ignore[arg-type]
+    except (TypeError, ValueError):
+        raise WorkflowValidationError(
+            "bad-weight", f"{key} is not a number: {value!r}", where
+        ) from None
+    if not (x >= 0.0) or x == float("inf"):  # NaN fails the >=
+        raise WorkflowValidationError(
+            "bad-weight", f"{key} must be finite and >= 0, got {x!r}",
+            where)
+    return x
+
+
 def from_json(text: str) -> Workflow:
     """Rebuild a :class:`Workflow` from :func:`to_json` output.
 
@@ -464,18 +500,84 @@ def from_json(text: str) -> Workflow:
     and their weights, ``parents``/``children`` being derived views.
     Execution entries are optional per task (weights default to the
     ``add_task`` defaults, as in WfCommons instances lacking history).
+
+    Malformed input raises :class:`WorkflowValidationError` — a
+    structured rejection (duplicate task ids, dangling or self-loop
+    file endpoints, cycles, negative/non-finite weights, schema
+    violations), never a raw ``KeyError``/``TypeError`` from the guts.
     """
-    doc = json.loads(text)
-    spec = doc["workflow"]["specification"]
-    wf = Workflow(name=doc.get("name", "workflow"))
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as exc:
+        raise WorkflowValidationError("bad-json", str(exc)) from None
+    try:
+        spec = doc["workflow"]["specification"]
+        task_list = spec["tasks"]
+    except (KeyError, TypeError) as exc:
+        raise WorkflowValidationError(
+            "bad-schema",
+            f"missing workflow.specification.tasks ({exc!r})"
+        ) from None
+    if not isinstance(task_list, list):
+        raise WorkflowValidationError(
+            "bad-schema", "specification.tasks is not a list")
+    if not task_list:
+        raise WorkflowValidationError(
+            "empty", "workflow has no tasks")
+    wf = Workflow(name=str(doc.get("name", "workflow")))
     index: dict[str, int] = {}
-    for t in spec["tasks"]:
-        index[t["id"]] = wf.add_task(label=t.get("name"))
+    for t in task_list:
+        if not isinstance(t, dict) or "id" not in t:
+            raise WorkflowValidationError(
+                "bad-schema", f"task record without an id: {t!r}")
+        tid = t["id"]
+        if tid in index:
+            raise WorkflowValidationError(
+                "duplicate-task-id",
+                "task id appears more than once", str(tid))
+        index[tid] = wf.add_task(label=t.get("name"))
     for f in spec.get("files", []):
-        wf.add_edge(index[f["source"]], index[f["target"]], f["size"])
+        if not isinstance(f, dict):
+            raise WorkflowValidationError(
+                "bad-schema", f"file record is not an object: {f!r}")
+        fid = str(f.get("id", f"{f.get('source')}->{f.get('target')}"))
+        for end in ("source", "target"):
+            if f.get(end) not in index:
+                raise WorkflowValidationError(
+                    "dangling-edge",
+                    f"file {end} {f.get(end)!r} names no task", fid)
+        if f["source"] == f["target"]:
+            raise WorkflowValidationError(
+                "self-loop", "file source equals target", fid)
+        size = _checked_weight(f.get("size", 1.0), "size", fid)
+        wf.add_edge(index[f["source"]], index[f["target"]], size)
     for e in doc["workflow"].get("execution", {}).get("tasks", []):
+        if not isinstance(e, dict) or e.get("id") not in index:
+            raise WorkflowValidationError(
+                "dangling-edge",
+                f"execution entry names no task: "
+                f"{e.get('id') if isinstance(e, dict) else e!r}")
         u = index[e["id"]]
-        wf.work[u] = float(e.get("work", wf.work[u]))
-        wf.mem[u] = float(e.get("memory", wf.mem[u]))
-        wf.persistent[u] = float(e.get("persistent", wf.persistent[u]))
+        eid = str(e["id"])
+        wf.work[u] = _checked_weight(e.get("work", wf.work[u]),
+                                     "work", eid)
+        wf.mem[u] = _checked_weight(e.get("memory", wf.mem[u]),
+                                    "memory", eid)
+        wf.persistent[u] = _checked_weight(
+            e.get("persistent", wf.persistent[u]), "persistent", eid)
+    # Kahn's sweep: the mapping stack assumes a DAG everywhere, so a
+    # cyclic submission must be rejected here, not hang downstream.
+    indeg = [len(wf.pred[u]) for u in range(wf.n)]
+    ready = [u for u, d in enumerate(indeg) if d == 0]
+    seen = 0
+    while ready:
+        u = ready.pop()
+        seen += 1
+        for v in wf.succ[u]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                ready.append(v)
+    if seen != wf.n:
+        raise WorkflowValidationError(
+            "cycle", f"{wf.n - seen} task(s) lie on a dependency cycle")
     return wf

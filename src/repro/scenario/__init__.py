@@ -34,12 +34,14 @@ platform)`` bit-exactly — the subsystem's identity anchor.
 from __future__ import annotations
 
 from .events import (
+    EventTimelineError,
     LinkDegrade,
     PlatformEvent,
     ProcArrival,
     ProcFailure,
     SpeedChange,
     event_from_dict,
+    validate_event_timeline,
 )
 from .policies import (
     FullReplan,
@@ -49,9 +51,17 @@ from .policies import (
     resolve_policy,
 )
 from .report import MigrationRecord, SegmentReport, TimelineReport
-from .runner import Scenario, run_scenario
+from .runner import (
+    FrozenPrefix,
+    Scenario,
+    apply_event_group,
+    freeze_prefix,
+    run_scenario,
+)
 
 __all__ = [
+    "EventTimelineError",
+    "FrozenPrefix",
     "FullReplan",
     "LinkDegrade",
     "MigrationRecord",
@@ -65,7 +75,10 @@ __all__ = [
     "SegmentReport",
     "SpeedChange",
     "TimelineReport",
+    "apply_event_group",
     "event_from_dict",
+    "freeze_prefix",
     "resolve_policy",
     "run_scenario",
+    "validate_event_timeline",
 ]

@@ -18,18 +18,63 @@ bandwidth overrides survive failures and arrivals.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
+from typing import Sequence
 
 from repro.core.platform import Platform, Processor
 
 __all__ = [
+    "EventTimelineError",
     "LinkDegrade",
     "PlatformEvent",
     "ProcArrival",
     "ProcFailure",
     "SpeedChange",
     "event_from_dict",
+    "validate_event_timeline",
 ]
+
+
+class EventTimelineError(ValueError):
+    """Structured timeline rejection raised at *build* time.
+
+    ``index`` is the offending position in the event list, ``code`` a
+    stable kind (``"bad-type"``, ``"non-finite-time"``,
+    ``"negative-time"``, ``"unsorted"``).  :class:`Scenario
+    <repro.scenario.runner.Scenario>` construction and the
+    :mod:`repro.service` event loop both enforce this invariant up
+    front — an unsorted or non-finite timeline must fail loudly before
+    any replanning starts, not misbehave mid-run.
+    """
+
+    def __init__(self, code: str, index: int, detail: str) -> None:
+        self.code = code
+        self.index = index
+        self.detail = detail
+        super().__init__(f"[{code}] event #{index}: {detail}")
+
+
+def validate_event_timeline(events: Sequence["PlatformEvent"]) -> None:
+    """Check ``events`` is a time-sorted list of finite, non-negative
+    :class:`PlatformEvent` s; raise :class:`EventTimelineError` if not."""
+    prev = None
+    for i, ev in enumerate(events):
+        if not isinstance(ev, PlatformEvent):
+            raise EventTimelineError(
+                "bad-type", i, f"not a PlatformEvent: {ev!r}")
+        if not math.isfinite(ev.time):
+            raise EventTimelineError(
+                "non-finite-time", i, f"time is {ev.time!r}")
+        if ev.time < 0:
+            raise EventTimelineError(
+                "negative-time", i, f"time is {ev.time!r}")
+        if prev is not None and ev.time < prev:
+            raise EventTimelineError(
+                "unsorted", i,
+                f"time {ev.time!r} precedes event #{i - 1} "
+                f"at {prev!r} — sort the timeline by time")
+        prev = ev.time
 
 
 @dataclass(frozen=True)
@@ -39,8 +84,9 @@ class PlatformEvent:
     time: float
 
     def __post_init__(self) -> None:
-        if self.time < 0:
-            raise ValueError(f"event time must be >= 0, got {self.time}")
+        if not (self.time >= 0) or self.time == float("inf"):
+            raise ValueError(
+                f"event time must be finite and >= 0, got {self.time}")
 
     # subclasses override ------------------------------------------- #
     kind: str = field(default="event", init=False, repr=False)

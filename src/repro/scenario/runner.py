@@ -44,25 +44,29 @@ from repro.core.scheduler import ResumeState, Scheduler, SchedulerConfig
 from repro.core.workflows import residual_workflow
 from repro.sim import build_specs, resolve_comm, run_engine, simulate
 
-from .events import PlatformEvent
+from .events import PlatformEvent, validate_event_timeline
 from .policies import resolve_policy
 from .report import MigrationRecord, SegmentReport, TimelineReport
 
-__all__ = ["Scenario", "run_scenario"]
+__all__ = ["FrozenPrefix", "Scenario", "apply_event_group",
+           "freeze_prefix", "run_scenario"]
 
 
 @dataclass
 class Scenario:
     """A workflow, a platform, and what happens to the platform when.
 
-    Events may be given in any order; execution applies them in time
-    order (stable for ties: listed order), pausing the simulation at
-    each distinct event time.  Processor indices in an event refer to
-    the platform *as of that event's application*: after a
-    ``ProcFailure``, later events (including same-instant ones, which
-    apply sequentially within their group) see the compacted indexing
-    — compose through the ``proc_map`` each ``apply`` returns when
-    building timelines programmatically.
+    The event timeline must be **sorted by time** with finite,
+    non-negative times — construction validates this and raises a
+    structured :class:`~repro.scenario.events.EventTimelineError`
+    otherwise (the :mod:`repro.service` event loop relies on the same
+    invariant).  Execution pauses the simulation once per distinct
+    event time (ties apply sequentially in listed order).  Processor
+    indices in an event refer to the platform *as of that event's
+    application*: after a ``ProcFailure``, later events (including
+    same-instant ones) see the compacted indexing — compose through
+    the ``proc_map`` each ``apply`` returns when building timelines
+    programmatically.
     """
 
     workflow: Workflow
@@ -72,9 +76,7 @@ class Scenario:
 
     def __post_init__(self) -> None:
         self.events = tuple(self.events)
-        for e in self.events:
-            if not isinstance(e, PlatformEvent):
-                raise TypeError(f"not a PlatformEvent: {e!r}")
+        validate_event_timeline(self.events)
         if not self.name:
             self.name = f"{self.workflow.name}@{self.platform.name}"
 
@@ -114,6 +116,115 @@ def _event_groups(
         else:
             groups.append([e])
     return groups
+
+
+def apply_event_group(
+    group: Sequence[PlatformEvent], platform: Platform,
+) -> tuple[Platform, dict[int, int | None]]:
+    """Apply same-instant events sequentially; return the new platform
+    and the composed old-index → new-index map (``None`` = gone)."""
+    new_platform = platform
+    proc_map: dict[int, int | None] = {j: j for j in range(platform.k)}
+    for ev in group:
+        new_platform, m = ev.apply(new_platform)
+        proc_map = {j: (m[pj] if pj is not None else None)
+                    for j, pj in proc_map.items()}
+    return new_platform, proc_map
+
+
+@dataclass
+class FrozenPrefix:
+    """What :func:`freeze_prefix` extracted at a pause point.
+
+    ``state`` is ready for :meth:`Scheduler.resume
+    <repro.core.scheduler.Scheduler.resume>`; ``sub_map`` maps each
+    residual task index back to the paused workflow's task id;
+    ``completed_local`` are the paused workflow's durably completed
+    task ids; the remaining fields are restart accounting for
+    migration records.
+    """
+
+    state: ResumeState
+    sub_map: list[int]
+    completed_local: set[int]
+    completed_vids: set[int]
+    inflight_vids: set[int]
+    old_names: list[str]
+    restarted_tasks: int
+    restarted_blocks: int
+    lost_work: float
+
+
+def freeze_prefix(
+    wf: Workflow,
+    mapping,
+    platform: Platform,
+    rel: float,
+    new_platform: Platform,
+    proc_map: dict[int, int | None],
+    *,
+    comm="contention-free",
+) -> FrozenPrefix:
+    """Pause ``mapping``'s execution on ``platform`` at ``rel`` (time
+    since this plan started), freeze the durably completed prefix, and
+    build the warm-start :class:`ResumeState` on ``new_platform``.
+
+    This is the pause-replan-stitch core shared by
+    :func:`run_scenario` (one workflow, platform timeline) and the
+    :mod:`repro.service` event loop (many jobs, one shared platform —
+    each affected job is frozen against its own sub-platform).
+    ``proc_map`` carries assignments across the event
+    (old index → new index, ``None`` for a lost processor); in-flight
+    blocks restart, and survive *pinned* to their processor.
+    """
+    q = mapping.quotient
+    blocks, edges = build_specs(q, platform)
+    trace = run_engine(blocks, edges, resolve_comm(comm), platform,
+                       record_events=False, stop_time=rel)
+    completed_vids = _frozen_blocks(trace, q)
+    inflight_vids = set(trace.start) - completed_vids
+
+    completed_local: set[int] = set()
+    for vid in completed_vids:
+        completed_local |= q.members[vid]
+    sub, sub_map = residual_workflow(wf, completed_local)
+    inv = {u: i for i, u in enumerate(sub_map)}
+    res_blocks: list[list[int]] = []
+    res_procs: list[int | None] = []
+    old_names: list[str] = []
+    pinned: set[int] = set()
+    restarted_tasks = restarted_blocks = 0
+    lost_work = 0.0
+    for vid in sorted(q.members):
+        if vid in completed_vids:
+            continue
+        members = sorted(inv[u] for u in q.members[vid])
+        old_pj = q.proc[vid]
+        new_pj = proc_map.get(old_pj)
+        b = len(res_blocks)
+        res_blocks.append(members)
+        res_procs.append(new_pj)
+        old_names.append(platform.procs[old_pj].name)
+        if vid in inflight_vids:
+            restarted_blocks += 1
+            restarted_tasks += len(members)
+            # compute time thrown away (capped at the full duration
+            # for delivered-but-undurable blocks)
+            elapsed = (min(rel, trace.finish.get(vid, rel))
+                       - trace.start[vid])
+            lost_work += elapsed * platform.procs[old_pj].speed
+            if new_pj is not None:
+                pinned.add(b)
+    state = ResumeState(wf=sub, platform=new_platform,
+                        blocks=res_blocks, proc_of_block=res_procs,
+                        pinned=pinned)
+    return FrozenPrefix(
+        state=state, sub_map=list(sub_map),
+        completed_local=completed_local,
+        completed_vids=completed_vids, inflight_vids=inflight_vids,
+        old_names=old_names, restarted_tasks=restarted_tasks,
+        restarted_blocks=restarted_blocks, lost_work=lost_work,
+    )
 
 
 def _group_dict(group: list[PlatformEvent]) -> dict:
@@ -250,14 +361,6 @@ def run_scenario(
             carry_sim = seg_sim  # final segment reuses it
             break
 
-        # -- pause the engine at the event ------------------------- #
-        blocks, edges = build_specs(res.quotient, platform)
-        comm = resolve_comm(sim_kw.get("comm", "contention-free"))
-        trace = run_engine(blocks, edges, comm, platform,
-                           record_events=False, stop_time=rel)
-        completed_vids = _frozen_blocks(trace, res.quotient)
-        inflight_vids = set(trace.start) - completed_vids
-
         segments.append(SegmentReport(
             index=len(segments), t_start=t, event=seg_event,
             platform_name=platform.name, n_procs=platform.k,
@@ -266,64 +369,25 @@ def run_scenario(
             task_ids=task_ids, mapping=res, platform=platform,
         ))
 
-        # -- apply the event group --------------------------------- #
-        new_platform = platform
-        proc_map: dict[int, int | None] = {j: j
-                                           for j in range(platform.k)}
-        for ev in group:
-            new_platform, m = ev.apply(new_platform)
-            proc_map = {j: (m[pj] if pj is not None else None)
-                        for j, pj in proc_map.items()}
-
-        # -- freeze the prefix, extract the residual --------------- #
-        q = res.quotient
-        completed_local: set[int] = set()
-        for vid in completed_vids:
-            completed_local |= q.members[vid]
-        completed_total += len(completed_local)
-        sub, sub_map = residual_workflow(wf, completed_local)
-        inv = {u: i for i, u in enumerate(sub_map)}
-        res_blocks: list[list[int]] = []
-        res_procs: list[int | None] = []
-        old_names: list[str] = []
-        pinned: set[int] = set()
-        restarted_tasks = restarted_blocks = 0
-        lost_work = 0.0
-        for vid in sorted(q.members):
-            if vid in completed_vids:
-                continue
-            members = sorted(inv[u] for u in q.members[vid])
-            old_pj = q.proc[vid]
-            new_pj = proc_map.get(old_pj)
-            b = len(res_blocks)
-            res_blocks.append(members)
-            res_procs.append(new_pj)
-            old_names.append(platform.procs[old_pj].name)
-            if vid in inflight_vids:
-                restarted_blocks += 1
-                restarted_tasks += len(members)
-                # compute time thrown away (capped at the full
-                # duration for delivered-but-undurable blocks)
-                elapsed = (min(rel, trace.finish.get(vid, rel))
-                           - trace.start[vid])
-                lost_work += elapsed * platform.procs[old_pj].speed
-                if new_pj is not None:
-                    pinned.add(b)
-        state = ResumeState(wf=sub, platform=new_platform,
-                            blocks=res_blocks, proc_of_block=res_procs,
-                            pinned=pinned)
+        # -- apply the event group, pause, freeze, extract --------- #
+        new_platform, proc_map = apply_event_group(group, platform)
+        fz = freeze_prefix(
+            wf, res, platform, rel, new_platform, proc_map,
+            comm=sim_kw.get("comm", "contention-free"))
+        completed_total += len(fz.completed_local)
+        state = fz.state
 
         # -- replan ------------------------------------------------ #
         t0 = time.perf_counter()
         report = pol.replan(state, cfg)
         replan_times.append(time.perf_counter() - t0)
         migrations.append(_migration_record(
-            te, pol.name, state, old_names, report, new_platform,
-            restarted_tasks, restarted_blocks, lost_work))
+            te, pol.name, state, fz.old_names, report, new_platform,
+            fz.restarted_tasks, fz.restarted_blocks, fz.lost_work))
 
         t = te
-        wf = sub
-        task_ids = [task_ids[u] for u in sub_map]
+        wf = state.wf
+        task_ids = [task_ids[u] for u in fz.sub_map]
         platform = new_platform
         seg_event = _group_dict(group)
         if not report.feasible:

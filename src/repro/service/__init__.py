@@ -1,0 +1,71 @@
+"""repro.service — scheduler-as-a-service: continuous multi-workflow
+operation with a fingerprinted plan cache.
+
+The paper's mapper plans one workflow, once.  This subsystem runs the
+mapper as a long-lived *service*: workflows arrive over virtual time on
+behalf of tenants, pass admission control (per-tenant quotas, weighted
+fair-share ordering), get planned onto a carved slice of the shared
+platform — through a plan cache keyed on a structural workflow
+fingerprint, so repeat pipelines skip the k' sweep entirely
+(:meth:`Scheduler.seeded <repro.core.scheduler.Scheduler.seeded>`) —
+execute in the discrete-event simulator, and survive mid-run platform
+events by warm-start replanning (:func:`repro.scenario.freeze_prefix`).
+Everything is deterministic in virtual time: the same submission trace
+and event timeline yield a bit-identical :class:`ServiceTrace`,
+whatever the wall clock or worker count did.
+
+::
+
+    from repro.core import sample_platform
+    from repro.core.workflows import random_layered
+    from repro.service import Submission, run_service
+
+    subs = [Submission(random_layered(80, seed=s), tenant="alice",
+                       arrival_t=10.0 * s) for s in range(4)]
+    report = run_service(subs, sample_platform(8))
+    report.completed            # JobRecords with latency/queue-wait
+    report.cache_hit_rate       # plan-cache effectiveness
+    print(report.gantt())       # stitched multi-job timeline
+
+Structured outcomes, never exceptions: a malformed payload or quota
+violation becomes a :class:`Rejection`; transient pressure becomes a
+logged :class:`Deferral`; a job that cannot be planned even with the
+whole platform free carries the scheduler's structured
+:class:`~repro.core.scheduler.Infeasibility`.  The identity anchor:
+one submission at t=0 with no events and empty quotas reproduces
+``Scheduler(cfg).schedule(wf, platform)`` with ``simulate=True``
+bit-exactly.
+"""
+from __future__ import annotations
+
+from .admission import FairQueue, QuotaConfig, TenantQuota
+from .fingerprint import (
+    WorkflowFingerprint,
+    fingerprint_workflow,
+    platform_signature,
+)
+from .loop import ServiceConfig, WorkflowService, run_service
+from .plancache import CachedPlan, PlanCache
+from .report import JobRecord, ServiceReport, ServiceTrace
+from .submission import Deferral, Rejection, Submission, resolve_workflow
+
+__all__ = [
+    "CachedPlan",
+    "Deferral",
+    "FairQueue",
+    "JobRecord",
+    "PlanCache",
+    "QuotaConfig",
+    "Rejection",
+    "ServiceConfig",
+    "ServiceReport",
+    "ServiceTrace",
+    "Submission",
+    "TenantQuota",
+    "WorkflowFingerprint",
+    "WorkflowService",
+    "fingerprint_workflow",
+    "platform_signature",
+    "resolve_workflow",
+    "run_service",
+]

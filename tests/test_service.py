@@ -1,0 +1,493 @@
+"""Tests for :mod:`repro.service` — fingerprints, plan cache, admission,
+and the multi-workflow event loop.
+
+The load-bearing properties, per the subsystem's contract:
+
+* fingerprints are **stable across process restarts** (no Python hash
+  randomization leaking in) and **never collide** for same-shape DAGs
+  with different weights — a false cache hit would silently seed the
+  wrong partition;
+* the single-submission service run is the **identity**: bit-exactly
+  ``schedule(wf, platform, simulate=True)``;
+* the trace is **deterministic**, including under ``workers > 1``;
+* the soak run **conserves jobs**: every submission ends in exactly one
+  terminal state, whatever mixture of malformed payloads, quota
+  violations and platform events the run throws at it.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - container has no hypothesis
+    sys.path.insert(0, str(Path(__file__).parent))
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import default_cluster
+from repro.core.dag import Workflow
+from repro.core.platform import Platform, Processor
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.workflows import generate_workflow, to_json
+from repro.scenario import (
+    EventTimelineError,
+    ProcArrival,
+    ProcFailure,
+    SpeedChange,
+    validate_event_timeline,
+)
+from repro.service import (
+    PlanCache,
+    QuotaConfig,
+    ServiceConfig,
+    ServiceReport,
+    ServiceTrace,
+    Submission,
+    TenantQuota,
+    WorkflowFingerprint,
+    fingerprint_workflow,
+    platform_signature,
+    run_service,
+)
+
+KPRIME = [2, 4]
+
+
+def _wf(family="montage", n=100, seed=1, plat=None):
+    return generate_workflow(family, n, seed=seed,
+                             platform=plat or default_cluster())
+
+
+def _cfg(**kw):
+    kw.setdefault("kprime", KPRIME)
+    kw.setdefault("simulate", True)
+    return SchedulerConfig(**kw)
+
+
+# ---------------------------------------------------------------------- #
+# fingerprints
+# ---------------------------------------------------------------------- #
+class TestFingerprint:
+    def test_deterministic_within_process(self):
+        wf = _wf()
+        assert (fingerprint_workflow(wf).digest
+                == fingerprint_workflow(wf).digest)
+
+    def test_survives_json_round_trip(self):
+        wf = _wf()
+        wf2 = __import__("repro.core.workflows",
+                         fromlist=["from_json"]).from_json(to_json(wf))
+        assert (fingerprint_workflow(wf).digest
+                == fingerprint_workflow(wf2).digest)
+
+    def test_stable_across_process_restarts(self, tmp_path):
+        """The digest must not depend on PYTHONHASHSEED or any other
+        per-process state — a restarted service must keep hitting the
+        plans its previous life cached."""
+        wf = _wf(n=60)
+        here = fingerprint_workflow(wf).digest
+        script = (
+            "import sys, json\n"
+            f"sys.path.insert(0, {str(Path('src').resolve())!r})\n"
+            "from repro.core.workflows import from_json\n"
+            "from repro.service import fingerprint_workflow\n"
+            f"wf = from_json({to_json(wf)!r})\n"
+            "print(fingerprint_workflow(wf).digest)\n"
+        )
+        for seed in ("0", "12345"):
+            out = subprocess.run(
+                [sys.executable, "-c", script], capture_output=True,
+                text=True, check=True,
+                env={"PYTHONHASHSEED": seed, "PATH": "/usr/bin:/bin"},
+            )
+            assert out.stdout.strip() == here
+
+    def test_weight_change_changes_digest(self):
+        wf = _wf(n=60)
+        d0 = fingerprint_workflow(wf).digest
+        wf.work[3] += 1.0
+        wf._flat_cache = None
+        assert fingerprint_workflow(wf).digest != d0
+
+    def test_edge_cost_change_changes_digest(self):
+        wf = _wf(n=60)
+        d0 = fingerprint_workflow(wf).digest
+        u = next(u for u in range(wf.n) if wf.succ[u])
+        v = next(iter(wf.succ[u]))
+        wf.succ[u][v] += 0.5
+        wf.pred[v][u] += 0.5
+        wf._flat_cache = None
+        assert fingerprint_workflow(wf).digest != d0
+
+    def test_round_trips_as_dict(self):
+        fp = fingerprint_workflow(_wf(n=60))
+        fp2 = WorkflowFingerprint.from_dict(
+            json.loads(json.dumps(fp.to_dict())))
+        assert fp2 == fp
+
+    @given(st.integers(min_value=0, max_value=10_000),
+           st.integers(min_value=0, max_value=59),
+           st.floats(min_value=0.001, max_value=1000.0))
+    @settings(max_examples=25, deadline=None)
+    def test_no_false_hits_property(self, seed, task, bump):
+        """Same shape, different weights ⇒ different digest.  A false
+        *miss* only costs a cold plan; a false *hit* would replay the
+        wrong partition — so perturbations must always separate."""
+        wf = _wf(n=60, seed=2)
+        task = task % wf.n          # families land near, not at, n
+        d0 = fingerprint_workflow(wf).digest
+        which = seed % 3
+        if which == 0:
+            wf.work[task] += bump
+        elif which == 1:
+            wf.mem[task] += bump
+        else:
+            u = next(u for u in range(wf.n) if wf.succ[u])
+            v = next(iter(wf.succ[u]))
+            wf.succ[u][v] += bump
+            wf.pred[v][u] += bump
+        wf._flat_cache = None
+        assert fingerprint_workflow(wf).digest != d0
+
+    def test_platform_signature_ignores_name(self):
+        plat = default_cluster()
+        renamed = Platform(list(plat.procs), plat.bandwidth, "other",
+                           dict(plat.link_bandwidth))
+        assert platform_signature(plat) == platform_signature(renamed)
+        slower = plat.with_speed(0, plat.speed(0) * 0.5)
+        assert platform_signature(plat) != platform_signature(slower)
+
+
+# ---------------------------------------------------------------------- #
+# plan cache
+# ---------------------------------------------------------------------- #
+class TestPlanCache:
+    def test_lru_eviction(self):
+        cache = PlanCache(capacity=2)
+        plat = default_cluster()
+        fps = [fingerprint_workflow(_wf(n=30, seed=s)) for s in range(3)]
+        keys = [PlanCache.key(fp, plat) for fp in fps]
+        for k in keys:
+            cache.put(k, [0] * 30, 2, 1.0)
+        assert len(cache) == 2
+        assert cache.get(keys[0]) is None       # evicted
+        assert cache.get(keys[2]) is not None
+        assert cache.stats()["evictions"] == 1
+
+    def test_key_separates_platforms(self):
+        fp = fingerprint_workflow(_wf(n=30))
+        plat = default_cluster()
+        degraded = plat.without({0})
+        assert PlanCache.key(fp, plat) != PlanCache.key(fp, degraded)
+
+
+# ---------------------------------------------------------------------- #
+# event-timeline validation (satellite: Scenario build-time checks)
+# ---------------------------------------------------------------------- #
+class TestTimelineValidation:
+    def test_unsorted_rejected(self):
+        evs = [SpeedChange(time=5.0, proc=0, factor=0.5),
+               ProcFailure(time=1.0, procs={1})]
+        with pytest.raises(EventTimelineError) as ei:
+            validate_event_timeline(evs)
+        assert ei.value.code == "unsorted"
+        assert ei.value.index == 1
+
+    def test_bad_type_rejected(self):
+        with pytest.raises(EventTimelineError) as ei:
+            validate_event_timeline(["not an event"])
+        assert ei.value.code == "bad-type"
+
+    def test_scenario_constructor_validates(self):
+        from repro.scenario import Scenario
+        wf = _wf(n=30)
+        evs = [SpeedChange(time=5.0, proc=0, factor=0.5),
+               ProcFailure(time=1.0, procs={1})]
+        with pytest.raises(EventTimelineError):
+            Scenario(wf, default_cluster(), evs)
+
+    def test_service_validates(self):
+        wf = _wf(n=30)
+        evs = [SpeedChange(time=5.0, proc=0, factor=0.5),
+               ProcFailure(time=1.0, procs={1})]
+        with pytest.raises(EventTimelineError):
+            run_service([Submission(wf)], default_cluster(), evs)
+
+    def test_nonfinite_event_time_rejected(self):
+        with pytest.raises(ValueError):
+            SpeedChange(time=float("nan"), proc=0, factor=0.5)
+        with pytest.raises(ValueError):
+            SpeedChange(time=float("inf"), proc=0, factor=0.5)
+
+
+# ---------------------------------------------------------------------- #
+# the service loop
+# ---------------------------------------------------------------------- #
+class TestServiceLoop:
+    def test_identity_anchor(self):
+        """One submission at t=0, no events, empty quotas ⇒ bit-exactly
+        the plain scheduler call."""
+        plat = default_cluster()
+        wf = _wf(n=120, seed=3)
+        cfg = _cfg()
+        ref = Scheduler(cfg).schedule(wf, plat)
+        rep = run_service([Submission(wf)], plat,
+                          config=ServiceConfig(scheduler=cfg))
+        (job,) = rep.jobs
+        assert job.status == "completed"
+        assert job.planning_path == "cold"
+        assert job.queue_wait == 0.0
+        assert job.makespan == ref.sim.makespan
+        ref_map = ref.summary.to_dict()
+        ref_map["runtime_s"] = 0.0
+        assert job.mapping == ref_map
+
+    def test_cache_hit_on_repeat(self):
+        plat = default_cluster()
+        wf = _wf(n=100, seed=5)
+        rep = run_service(
+            [Submission(wf, name="a"),
+             Submission(wf, name="b", arrival_t=1e6)],
+            plat, config=ServiceConfig(scheduler=_cfg()))
+        a, b = rep.jobs
+        assert a.planning_path == "cold"
+        assert b.planning_path == "seeded"
+        assert rep.cache_stats["service_cache_hits"] == 1
+        assert rep.cache_stats["service_cache_stores"] >= 1
+        assert rep.cache_hit_rate == 0.5
+        # the seeded replay must not cost makespan (same platform,
+        # same partition, Steps 2-4 re-run: tiny fp drift tolerated)
+        assert b.makespan == pytest.approx(a.makespan, rel=1e-9)
+
+    def test_cache_disabled(self):
+        plat = default_cluster()
+        wf = _wf(n=80, seed=5)
+        rep = run_service(
+            [Submission(wf, name="a"),
+             Submission(wf, name="b", arrival_t=1e6)],
+            plat, config=ServiceConfig(scheduler=_cfg(),
+                                       plan_cache=False))
+        assert [j.planning_path for j in rep.jobs] == ["cold", "cold"]
+        assert rep.cache_hit_rate is None
+
+    def test_external_cache_shared_across_runs(self):
+        plat = default_cluster()
+        wf = _wf(n=80, seed=6)
+        cache = PlanCache()
+        cfg = ServiceConfig(scheduler=_cfg())
+        r1 = run_service([Submission(wf)], plat, config=cfg, cache=cache)
+        r2 = run_service([Submission(wf)], plat, config=cfg, cache=cache)
+        assert r1.jobs[0].planning_path == "cold"
+        assert r2.jobs[0].planning_path == "seeded"
+
+    def test_malformed_payload_rejected_not_raised(self):
+        rep = run_service(
+            [Submission('{"broken": true}', name="bad"),
+             Submission("not json at all", name="worse"),
+             Submission({"specification": {"tasks": []}}, name="empty")],
+            default_cluster(), config=ServiceConfig(scheduler=_cfg()))
+        assert all(j.status == "rejected" for j in rep.jobs)
+        assert all(j.rejection["code"] == "malformed" for j in rep.jobs)
+
+    def test_quota_rejections(self):
+        plat = default_cluster()
+        wf = _wf(n=100, seed=2)
+        quotas = QuotaConfig(tenants={
+            "small": TenantQuota(max_tasks=50),
+            "narrow": TenantQuota(max_pending=1),
+        })
+        rep = run_service(
+            [Submission(wf, tenant="small", name="too-big"),
+             Submission(wf, tenant="narrow", name="first"),
+             Submission(wf, tenant="narrow", name="second"),
+             Submission(wf, tenant="narrow", name="third")],
+            plat, config=ServiceConfig(scheduler=_cfg(), quotas=quotas))
+        by_name = {j.name: j for j in rep.jobs}
+        assert by_name["too-big"].status == "rejected"
+        assert by_name["too-big"].rejection["code"] == "size-quota"
+        # first dispatches immediately (leaves the queue), second waits
+        # in the single pending slot, third overflows it
+        assert by_name["first"].status == "completed"
+        assert by_name["second"].status == "completed"
+        assert by_name["third"].status == "rejected"
+        assert by_name["third"].rejection["code"] == "queue-quota"
+
+    def test_fair_share_weights(self):
+        """With everything arriving at once and capacity for one job at
+        a time, a weight-2 tenant drains ~2x the work per turn."""
+        plat = default_cluster()
+        wf = _wf(n=100, seed=2)
+        quotas = QuotaConfig(tenants={"heavy": TenantQuota(weight=2.0)})
+        subs = []
+        for i in range(2):
+            subs.append(Submission(wf, tenant="heavy", name=f"h{i}"))
+            subs.append(Submission(wf, tenant="light", name=f"l{i}"))
+        rep = run_service(subs, plat,
+                          config=ServiceConfig(scheduler=_cfg(),
+                                               quotas=quotas))
+        assert all(j.status == "completed" for j in rep.jobs)
+        h = [j for j in rep.jobs if j.tenant == "heavy"]
+        l = [j for j in rep.jobs if j.tenant == "light"]
+        # the heavy tenant's backlog never waits longer than light's
+        assert max(j.dispatch_t for j in h) <= max(j.dispatch_t
+                                                   for j in l)
+
+    def test_warm_replan_on_owned_slowdown(self):
+        plat = default_cluster()
+        cfg = _cfg(kprime=[4])
+        wf = _wf(n=150, seed=7)
+        base = run_service([Submission(wf)], plat,
+                           config=ServiceConfig(scheduler=cfg))
+        names = set(base.jobs[0].allocation)
+        idx = [i for i, p in enumerate(plat.procs) if p.name in names]
+        rep = run_service(
+            [Submission(wf, name="w")], plat,
+            [SpeedChange(time=200.0, proc=idx[0], factor=0.1)],
+            ServiceConfig(scheduler=cfg))
+        (job,) = rep.jobs
+        assert job.status == "completed"
+        assert job.n_replans == 1
+        replans = [e for e in rep.trace.log if e["kind"] == "replan"]
+        assert replans and replans[0]["path"] == "warm"
+        # a 10x slowdown on an owned processor must cost makespan
+        assert job.finish_t > base.jobs[0].finish_t
+
+    def test_proc_arrival_disturbs_nobody(self):
+        plat = default_cluster()
+        wf = _wf(n=120, seed=3)
+        cfg = ServiceConfig(scheduler=_cfg())
+        base = run_service([Submission(wf)], plat, config=cfg)
+        rep = run_service(
+            [Submission(wf)], plat,
+            [ProcArrival(time=100.0,
+                         procs=(Processor("new-0", 2.0, 64.0),))],
+            cfg)
+        assert rep.jobs[0].n_replans == 0
+        assert rep.jobs[0].finish_t == base.jobs[0].finish_t
+
+    def test_trace_deterministic_and_round_trips(self):
+        plat = default_cluster()
+        wfs = [_wf(f, 90, s) for s, f in
+               enumerate(["montage", "epigenomics"])]
+        subs = [Submission(wfs[0], tenant="a", name="m"),
+                Submission(wfs[1], tenant="b", arrival_t=10.0, name="e"),
+                Submission("garbage", tenant="c", arrival_t=5.0,
+                           name="x")]
+        events = [ProcFailure(time=250.0, procs={0, 1})]
+        cfg = ServiceConfig(scheduler=_cfg())
+        r1 = run_service(subs, plat, events, cfg)
+        r2 = run_service(subs, plat, events, cfg)
+        assert r1.trace.to_json() == r2.trace.to_json()
+        rt = ServiceTrace.from_json(r1.trace.to_json())
+        assert rt.to_json() == r1.trace.to_json()
+        rr = ServiceReport.from_json(r1.to_json())
+        assert rr.trace.to_json() == r1.trace.to_json()
+
+    def test_trace_deterministic_with_workers(self):
+        """The parallel k' sweep must not leak nondeterminism into the
+        service trace."""
+        plat = default_cluster()
+        wf = _wf(n=100, seed=4)
+        subs = [Submission(wf, name="a"),
+                Submission(wf, name="b", arrival_t=50.0)]
+        serial = run_service(
+            subs, plat,
+            config=ServiceConfig(scheduler=_cfg(workers=1)))
+        parallel = run_service(
+            subs, plat,
+            config=ServiceConfig(scheduler=_cfg(workers=2)))
+        assert serial.trace.to_json() == parallel.trace.to_json()
+
+    def test_soak_conservation(self):
+        """Every submission ends in exactly one terminal state, and the
+        terminal counters agree with the trace — across a mixed barrage
+        of valid jobs, malformed payloads, quota violations, failures
+        and arrivals."""
+        plat = default_cluster()
+        cfg = _cfg()
+        fams = ["montage", "epigenomics", "seismology", "blast"]
+        subs = []
+        for i in range(10):
+            if i % 5 == 4:
+                subs.append(Submission('{"oops": %d}' % i,
+                                       tenant="mal",
+                                       arrival_t=7.0 * i,
+                                       name=f"bad{i}"))
+            else:
+                wf = _wf(fams[i % len(fams)], 60 + 10 * (i % 3), i)
+                subs.append(Submission(wf, tenant=f"t{i % 3}",
+                                       arrival_t=7.0 * i,
+                                       name=f"job{i}"))
+        events = [ProcFailure(time=150.0, procs={2, 3}),
+                  SpeedChange(time=400.0, proc=0, factor=0.5),
+                  ProcArrival(time=800.0,
+                              procs=(Processor("spare-0", 2.5, 128.0),))]
+        quotas = QuotaConfig(
+            tenants={"t0": TenantQuota(max_running=1)},
+            default=TenantQuota())
+        rep = run_service(subs, plat, events,
+                          ServiceConfig(scheduler=cfg, quotas=quotas))
+        assert len(rep.jobs) == len(subs)
+        terminal = {"completed", "infeasible", "rejected"}
+        for j in rep.jobs:
+            assert j.status in terminal
+            if j.status == "completed":
+                assert j.finish_t is not None
+                assert j.makespan is not None and j.makespan > 0
+                assert j.latency >= j.queue_wait >= 0
+            elif j.status == "infeasible":
+                assert j.infeasibility is not None
+            else:
+                assert j.rejection is not None
+        tallies = rep.cache_stats
+        assert (tallies.get("service_completions", 0)
+                == len(rep.completed))
+        assert (tallies.get("service_rejections", 0)
+                == len(rep.rejected))
+        assert (tallies.get("service_infeasible", 0)
+                == len(rep.infeasible))
+        assert (tallies.get("service_admissions", 0)
+                == len(rep.jobs) - len(rep.rejected))
+        # determinism holds for the whole soak
+        rep2 = run_service(subs, plat, events,
+                           ServiceConfig(scheduler=cfg, quotas=quotas))
+        assert rep.trace.to_json() == rep2.trace.to_json()
+
+    def test_terminal_infeasibility_is_structured(self):
+        """A workflow whose biggest task exceeds every processor memory
+        is terminally infeasible — a structured outcome, not a crash."""
+        plat = default_cluster()
+        wf = Workflow(name="huge")
+        a, b = wf.add_task(work=10.0, mem=1e9), wf.add_task(work=5.0,
+                                                            mem=4.0)
+        wf.add_edge(a, b, 1.0)
+        rep = run_service([Submission(wf)], plat,
+                          config=ServiceConfig(scheduler=_cfg()))
+        (job,) = rep.jobs
+        assert job.status == "infeasible"
+        assert job.infeasibility["reason"]
+
+    def test_gantt_renders(self):
+        plat = default_cluster()
+        wf = _wf(n=80, seed=9)
+        rep = run_service(
+            [Submission(wf, name="a"),
+             Submission("junk", name="z", arrival_t=1.0)],
+            plat, config=ServiceConfig(scheduler=_cfg()))
+        art = rep.gantt()
+        assert "a#0" in art and "rejected" in art
+        assert "█" in art
+
+    def test_utilization_timeline(self):
+        plat = default_cluster()
+        wf = _wf(n=80, seed=9)
+        rep = run_service([Submission(wf)], plat,
+                          config=ServiceConfig(scheduler=_cfg()))
+        assert rep.utilization is not None and 0 < rep.utilization <= 1
+        assert rep.trace.utilization[0][1] > 0     # busy at dispatch
+        assert rep.trace.utilization[-1][1] == 0   # idle at the end

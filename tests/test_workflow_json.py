@@ -81,3 +81,83 @@ def test_execution_entries_optional():
     assert wf.work == [1.0, 7.0]     # add_task default, then override
     assert wf.mem == [1.0, 1.0]
     assert wf.persistent == [0.0, 0.0]
+
+
+# ---------------------------------------------------------------------- #
+# structured validation (service admission path)
+# ---------------------------------------------------------------------- #
+class TestValidation:
+    """Malformed payloads raise WorkflowValidationError with a stable
+    code — the service turns these into Rejections, so the code set is
+    API surface."""
+
+    def _doc(self, tasks=None, files=None, execution=None):
+        doc = {"name": "t", "workflow": {"specification": {
+            "tasks": tasks if tasks is not None else [{"id": "a"},
+                                                      {"id": "b"}],
+        }}}
+        if files is not None:
+            doc["workflow"]["specification"]["files"] = files
+        if execution is not None:
+            doc["workflow"]["execution"] = {"tasks": execution}
+        return json.dumps(doc)
+
+    def _code(self, text):
+        from repro.core.workflows import WorkflowValidationError
+        with pytest.raises(WorkflowValidationError) as ei:
+            from_json(text)
+        return ei.value.code
+
+    def test_bad_json(self):
+        assert self._code("{not json") == "bad-json"
+
+    def test_bad_schema(self):
+        assert self._code('{"no": "workflow"}') == "bad-schema"
+        assert self._code(json.dumps(
+            {"workflow": {"specification": {"tasks": "nope"}}}
+        )) == "bad-schema"
+
+    def test_empty(self):
+        assert self._code(json.dumps(
+            {"workflow": {"specification": {"tasks": []}}})) == "empty"
+
+    def test_duplicate_task_id(self):
+        assert self._code(self._doc(
+            tasks=[{"id": "a"}, {"id": "a"}])) == "duplicate-task-id"
+
+    def test_dangling_edge(self):
+        assert self._code(self._doc(
+            files=[{"source": "a", "target": "ghost",
+                    "size": 1.0}])) == "dangling-edge"
+        assert self._code(self._doc(
+            execution=[{"id": "ghost", "work": 1.0}])) == "dangling-edge"
+
+    def test_self_loop(self):
+        assert self._code(self._doc(
+            files=[{"source": "a", "target": "a",
+                    "size": 1.0}])) == "self-loop"
+
+    def test_bad_weights(self):
+        for field, value in (("work", -1.0), ("memory", float("nan")),
+                             ("persistent", float("inf"))):
+            text = self._doc(execution=[{"id": "a", field: value}])
+            # json.dumps writes NaN/Infinity literals; Python's loads
+            # accepts them, so the weight check (not bad-json) fires
+            assert self._code(text) == "bad-weight"
+        assert self._code(self._doc(
+            files=[{"source": "a", "target": "b",
+                    "size": -3.0}])) == "bad-weight"
+
+    def test_cycle(self):
+        assert self._code(self._doc(
+            files=[{"source": "a", "target": "b", "size": 1.0},
+                   {"source": "b", "target": "a", "size": 1.0}],
+        )) == "cycle"
+
+    def test_error_carries_where(self):
+        from repro.core.workflows import WorkflowValidationError
+        with pytest.raises(WorkflowValidationError) as ei:
+            from_json(self._doc(
+                execution=[{"id": "a", "work": -1.0}]))
+        assert ei.value.where == "a"
+        assert "[bad-weight]" in str(ei.value)
