@@ -2,7 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: verify test fast bench bench-large bench-sweep bench-sim \
-	bench-scenario bench-service bench-step1 bench-step2 docs-check
+	bench-scenario bench-service bench-step1 bench-step2 bench-obs \
+	docs-check
 
 # tier-1 verification (ROADMAP.md) + executable-docs check
 verify:
@@ -60,3 +61,9 @@ bench-scenario:
 # throughput/latency/replan counters -> BENCH_runtime.json ("service")
 bench-service:
 	python -m benchmarks.bench_service
+
+# repro.obs inertness budget: disabled-vs-PR-7 (<=2%) and
+# enabled-vs-disabled (<=10%) overhead on the n=1000 suite, makespans
+# asserted bit-identical -> BENCH_runtime.json ("obs")
+bench-obs:
+	python -m benchmarks.bench_obs

@@ -1,0 +1,121 @@
+"""Observability overhead: the ``repro.obs`` inertness budget.
+
+PR 8's hard contract is that tracing is *provably inert*: makespans are
+bit-identical with ``ObsConfig(enabled=True)`` and near-zero overhead
+remains when disabled.  This tier measures both on the n=1000 synthetic
+suite (seed=1, full k' grid, same instances as the ``quick`` tier):
+
+* ``disabled_vs_pr7`` — the instrumented-but-disabled scheduler against
+  the embedded PR-7 wall clocks (budget: ≤2% regression),
+* ``enabled_vs_disabled`` — full span tracing (run/sweep-point/stage
+  spans + Chrome-trace export) against disabled (budget: ≤10%),
+* per-family bit-identity asserts between the two modes.
+
+Timings are best-of-``REPEATS`` to damp scheduler-noise; the budgets
+are recorded in the ``obs`` tier of ``BENCH_runtime.json`` (boolean
+``within_budget`` flags, not hard asserts — wall clocks on a shared
+container drift, the bit-identity asserts are the hard contract).
+
+``python -m benchmarks.bench_obs`` or ``make bench-obs``.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import default_cluster, schedule
+from repro.obs import ObsConfig
+
+from .bench_runtime import _load_results, _write_results
+from .common import KPRIME, emit, geomean, workflow_suite
+
+# n=1000 dag_het_part wall clocks measured on this container at the
+# PR-7 head (seed=1, full k' grid) — the fixed "before instrumentation"
+# anchor for the disabled-overhead budget.
+PR7_HET_BASELINE_S = {
+    "genome": 0.0872, "blast": 0.0622, "bwa": 0.0767,
+    "epigenomics": 0.4135, "montage": 0.2647, "seismology": 0.0535,
+    "soykb": 0.1045,
+}
+
+DISABLED_BUDGET = 1.02   # ≤2% vs the PR-7 anchor
+ENABLED_BUDGET = 1.10    # ≤10% vs disabled
+REPEATS = 3
+
+
+def _best_of(fn, repeats: int = REPEATS):
+    best_dt, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn()
+        dt = time.perf_counter() - t0
+        if dt < best_dt:
+            best_dt, out = dt, res
+    return best_dt, out
+
+
+def run(n: int = 1000, seeds=(1,), write_json: bool = True) -> dict:
+    plat = default_cluster()
+    results = _load_results()
+    tier_out = results.setdefault("obs", {})
+    rows: list[dict] = []
+    tmp = Path(tempfile.mkdtemp(prefix="bench_obs_"))
+    for family, _n, seed, wf in workflow_suite(plat, (n,), seeds):
+        obs = ObsConfig(enabled=True,
+                        trace_path=tmp / f"{family}.trace.json")
+        t_off, rep_off = _best_of(lambda: schedule(
+            wf, plat, algorithm="dag_het_part", kprime=KPRIME))
+        t_on, rep_on = _best_of(lambda: schedule(
+            wf, plat, algorithm="dag_het_part", kprime=KPRIME, obs=obs))
+        assert rep_on.makespan == rep_off.makespan, (
+            f"tracing changed the plan on {family} n={n}: "
+            f"{rep_on.makespan} != {rep_off.makespan}"
+        )
+        row = {
+            "family": family, "seed": seed, "makespan": rep_off.makespan,
+            "disabled_s": t_off, "enabled_s": t_on,
+            "enabled_vs_disabled": t_on / t_off,
+            "n_spans": len(rep_on.spans),
+        }
+        anchor = PR7_HET_BASELINE_S.get(family)
+        if anchor:
+            row["pr7_baseline_s"] = anchor
+            row["disabled_vs_pr7"] = t_off / anchor
+        emit(f"obs/n={n}/{family}/enabled_vs_disabled",
+             row["enabled_vs_disabled"], "x;identical_makespan")
+        emit(f"obs/n={n}/{family}/disabled_vs_pr7",
+             row.get("disabled_vs_pr7", float("nan")),
+             f"x;budget<={DISABLED_BUDGET}")
+        rows.append(row)
+        dis = geomean([r.get("disabled_vs_pr7") for r in rows])
+        ena = geomean([r["enabled_vs_disabled"] for r in rows])
+        tier_out[f"n={n}"] = {
+            "kprime": list(KPRIME),
+            "repeats": REPEATS,
+            "families": rows,
+            "disabled_vs_pr7_geomean": dis,
+            "enabled_vs_disabled_geomean": ena,
+            "budgets": {
+                "disabled_vs_pr7": DISABLED_BUDGET,
+                "enabled_vs_disabled": ENABLED_BUDGET,
+            },
+            "within_budget": {
+                "disabled": bool(dis <= DISABLED_BUDGET),
+                "enabled": bool(ena <= ENABLED_BUDGET),
+            },
+        }
+        if write_json:
+            _write_results(results)
+    summary = tier_out[f"n={n}"]
+    emit(f"obs/n={n}/disabled_vs_pr7_geomean",
+         summary["disabled_vs_pr7_geomean"],
+         f"x;budget<={DISABLED_BUDGET};ok={summary['within_budget']['disabled']}")
+    emit(f"obs/n={n}/enabled_vs_disabled_geomean",
+         summary["enabled_vs_disabled_geomean"],
+         f"x;budget<={ENABLED_BUDGET};ok={summary['within_budget']['enabled']}")
+    return tier_out
+
+
+if __name__ == "__main__":
+    run()

@@ -25,14 +25,23 @@ lifecycle (``service_admissions`` / ``service_dispatches`` /
 
 Counters only ever *count* — they never influence control flow — so
 instrumentation cannot change scheduling results.
+
+Since PR 8 this module is the **counter facet** of the typed metrics
+registry (:data:`repro.obs.metrics.METRICS`): :data:`COUNTERS` *is*
+``METRICS.counters``, so every ``bump()`` feeds the registry that also
+holds gauges and histograms, and the registry's snapshot/delta/merge
+protocol subsumes this module's.  The narrow API below is unchanged —
+existing call sites and tests keep working verbatim.
 """
 from __future__ import annotations
 
 from collections import Counter
 
+from repro.obs.metrics import METRICS
+
 __all__ = ["COUNTERS", "bump", "snapshot", "delta", "reset"]
 
-COUNTERS: Counter = Counter()
+COUNTERS: Counter = METRICS.counters
 
 
 def bump(name: str, n: int = 1) -> None:

@@ -61,6 +61,8 @@ from __future__ import annotations
 import heapq
 from typing import Iterable
 
+from repro.obs.tracer import current_tracer
+
 from . import counters
 from .dag import QuotientGraph
 from .makespan import bottom_weights, bottom_weights_flat
@@ -314,6 +316,18 @@ class IncrementalEvaluator:
         abort is then an exact rejection, so None means "provably no
         better than ``bound``", never a false negative.
         """
+        # per-probe spans are *opt-in* (Tracer.probe_spans): probes fire
+        # tens of thousands of times per sweep, so even span-on-trace
+        # would blow the enabled-overhead budget
+        tr = current_tracer()
+        if tr is not None and tr.probe_spans:
+            with tr.span("probe.swap", v=v, w=w) as sp:
+                ms = self._probe_swap(v, w, bound)
+                sp.attrs["beats_bound"] = ms is not None
+                return ms
+        return self._probe_swap(v, w, bound)
+
+    def _probe_swap(self, v: int, w: int, bound: float) -> float | None:
         proc = self.q.proc
         pv, pw = proc[v], proc[w]
         proc[v], proc[w] = pw, pv
@@ -324,6 +338,16 @@ class IncrementalEvaluator:
 
     def probe_move(self, v: int, p: int | None, bound: float) -> float | None:
         """Makespan after assigning ``v`` to ``p``, or None if ``>= bound``."""
+        tr = current_tracer()
+        if tr is not None and tr.probe_spans:
+            with tr.span("probe.move", v=v, p=p) as sp:
+                ms = self._probe_move(v, p, bound)
+                sp.attrs["beats_bound"] = ms is not None
+                return ms
+        return self._probe_move(v, p, bound)
+
+    def _probe_move(self, v: int, p: int | None,
+                    bound: float) -> float | None:
         proc = self.q.proc
         pv = proc[v]
         proc[v] = p
@@ -348,6 +372,16 @@ class IncrementalEvaluator:
         probe cannot escalate to a triple merge) and guarantee exact
         ranks, as for the other probes.
         """
+        tr = current_tracer()
+        if tr is not None and tr.probe_spans:
+            with tr.span("probe.merge", a=a, b=b, proc=proc) as sp:
+                ms = self._probe_merge(a, b, proc, bound)
+                sp.attrs["beats_bound"] = ms is not None
+                return ms
+        return self._probe_merge(a, b, proc, bound)
+
+    def _probe_merge(self, a: int, b: int, proc: int,
+                     bound: float) -> float | None:
         q = self.q
         # the rank-windowed cycle probe (not just the bounded overlay)
         # is only sound on exact ranks — fail loudly, not wrongly

@@ -39,10 +39,19 @@ only cache deterministic pure functions).
 from __future__ import annotations
 
 import json
+import logging
 import time
 from concurrent.futures import ProcessPoolExecutor
+from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
 from typing import Callable, Protocol, Sequence, runtime_checkable
+
+from repro.obs import JsonlSink, ObsConfig, span_events, write_chrome_trace
+from repro.obs import tracer as _trc
+from repro.obs.metrics import METRICS, Histogram
+from repro.obs.tracer import trace_span
+
+_log = logging.getLogger(__name__)
 
 from . import counters
 from .baseline import MappingResult, _pack_min_peak
@@ -92,7 +101,12 @@ class SweepPoint:
     (:mod:`repro.core.counters` deltas: Step-2 flat/scalar dispatch and
     memo reuse, Pearce–Kelly rank repairs vs full refreshes, Step-4
     swap-probe cache hits) — collected per attempt so the parallel
-    sweep's per-worker counters aggregate correctly.
+    sweep's per-worker counters aggregate correctly.  ``metrics`` is
+    the attempt's non-counter :data:`repro.obs.metrics.METRICS` delta
+    (gauges + histogram dicts) under the same bracket, and travels the
+    same picklable route from pool workers; ``spans`` holds the
+    attempt's finished tracer spans when the worker traced (transient
+    — spliced into the parent tracer, never serialized to JSON).
     """
 
     k_prime: int | None
@@ -104,6 +118,8 @@ class SweepPoint:
     fail_reason: str | None = None
     memory_gap: float | None = None
     cache_stats: dict[str, int] = field(default_factory=dict)
+    metrics: dict = field(default_factory=dict)
+    spans: list = field(default_factory=list, repr=False, compare=False)
 
     def to_dict(self) -> dict:
         return {
@@ -116,11 +132,12 @@ class SweepPoint:
             "fail_reason": self.fail_reason,
             "memory_gap": self.memory_gap,
             "cache_stats": dict(self.cache_stats),
+            "metrics": dict(self.metrics),
         }
 
     @classmethod
     def from_dict(cls, d: dict) -> "SweepPoint":
-        return cls(**d)
+        return cls(**{k: v for k, v in d.items() if k != "spans"})
 
 
 @dataclass
@@ -232,6 +249,13 @@ class ScheduleReport:
     dynamic topological ranks), ``swap_probe_cache_hits`` /
     ``swap_probes`` (Step-4 dependency-region verdict reuse) — see
     docs/benchmarks.md for the full key list.
+
+    ``metrics`` is the run's aggregated non-counter metrics block
+    (``{"gauges": ..., "histograms": ...}``, merged over all sweep
+    points — e.g. the ``sched_sweep_point_s`` plan-latency histogram;
+    see docs/observability.md).  ``spans`` carries the run's finished
+    tracer spans when tracing was on (live objects — excluded from
+    JSON and equality, like ``best``).
     """
 
     algorithm: str
@@ -243,6 +267,8 @@ class ScheduleReport:
     workers: int
     truncated: bool = False
     cache_stats: dict[str, int] = field(default_factory=dict)
+    metrics: dict = field(default_factory=dict)
+    spans: list = field(default_factory=list, repr=False, compare=False)
     best: MappingResult | None = field(
         default=None, repr=False, compare=False)
 
@@ -272,6 +298,7 @@ class ScheduleReport:
             "workers": self.workers,
             "truncated": self.truncated,
             "cache_stats": dict(self.cache_stats),
+            "metrics": dict(self.metrics),
         }
 
     def to_json(self, **kw) -> str:
@@ -304,6 +331,8 @@ class ScheduleReport:
             workers=d.get("workers", 1),
             truncated=d.get("truncated", False),
             cache_stats=dict(d.get("cache_stats", {})),
+            # absent on pre-PR-8 payloads: default to empty
+            metrics=dict(d.get("metrics", {})),
         )
 
     @classmethod
@@ -750,7 +779,11 @@ class SchedulerConfig:
     (``comm``, ``jitter``, ``replicas``, ``memory``, ...); it runs once
     per sweep point and attaches a :class:`repro.sim.SimReport` to
     each mapping's ``extras["sim"]`` — read ``ScheduleReport.sim`` for
-    the winner's.
+    the winner's.  ``obs`` is the run's
+    :class:`~repro.obs.ObsConfig`: ``enabled`` turns on span tracing
+    (run → sweep point → stage, incl. pool workers), ``trace_path`` /
+    ``sink`` export a Chrome trace / JSONL span log at the end of the
+    run — all provably inert (bit-identical makespans on/off).
     """
 
     algorithm: str = "dag_het_part"
@@ -765,6 +798,7 @@ class SchedulerConfig:
     stages: Sequence[str] | None = None
     simulate: bool = False
     sim_options: dict | None = None
+    obs: ObsConfig | None = None
     #: opt into multilevel Step-1 partitioning (coarsen → partition →
     #: uncoarsen).  Changes cuts — hence makespans — by design, so it is
     #: never on implicitly; the bit-identical scalar/flat dispatch knob
@@ -782,7 +816,11 @@ class _RunSpec:
     time so spawn-based worker pools (no fork: the globals would reset
     to "auto" on re-import) honour a forced mode too;
     ``step1_multilevel`` carries the config's multilevel Step-1 opt-in
-    into every pipeline run the same way.
+    into every pipeline run the same way.  ``obs_enabled`` /
+    ``probe_spans`` tell spawn-pool workers to trace their sweep-point
+    runs (fork workers would inherit the active tracer, but a fresh
+    per-task tracer keeps the shipped span batches self-contained in
+    both start methods).
     """
 
     stage_names: tuple[str, ...]
@@ -791,6 +829,61 @@ class _RunSpec:
     step2_impl: str = "auto"
     step1_impl: str = "auto"
     step1_multilevel: bool = False
+    obs_enabled: bool = False
+    probe_spans: bool = False
+
+
+# ---------------------------------------------------------------------- #
+# observability plumbing
+# ---------------------------------------------------------------------- #
+def _merge_metric_delta(acc: dict, delta: dict) -> None:
+    """Fold one sweep point's sparse metrics delta (gauges + histogram
+    dicts, counters excluded — they aggregate as ``cache_stats``) into
+    a plain-dict accumulator of the same shape (the report's
+    ``metrics`` block)."""
+    for k, v in delta.get("gauges", {}).items():
+        acc.setdefault("gauges", {})[k] = v
+    for k, d in delta.get("histograms", {}).items():
+        hists = acc.setdefault("histograms", {})
+        if k not in hists:
+            hists[k] = Histogram.from_dict(d).to_dict()  # detached copy
+        else:
+            h = Histogram.from_dict(hists[k])
+            h.merge_dict(d)
+            hists[k] = h.to_dict()
+
+
+@contextmanager
+def _obs_session(obs: ObsConfig | None):
+    """One run's tracing session: yields ``(tracer, start_index)``.
+
+    With tracing off — ``obs`` is ``None`` or disabled — yields
+    ``(None, 0)`` and costs two attribute reads.  Otherwise an
+    *enclosing* activation (the service loop traces across scheduler
+    calls) is honoured and its tracer reused; only when this run owns
+    the tracer are the exporters driven on exit: the Chrome trace to
+    ``obs.trace_path``, span records to the ``obs.sink`` JSONL log.
+    """
+    if obs is None or not obs.enabled:
+        yield None, 0
+        return
+    outer = _trc.current_tracer()
+    tracer = outer if outer is not None else obs.make_tracer()
+    own = outer is None
+    with _trc.activate(tracer if own else None):
+        start = len(tracer.spans)
+        try:
+            yield tracer, start
+        finally:
+            if own and (obs.trace_path or obs.sink):
+                spans = tracer.spans[start:]
+                if obs.trace_path:
+                    write_chrome_trace(obs.trace_path,
+                                       span_events(spans))
+                if obs.sink:
+                    with JsonlSink(obs.sink) as sink:
+                        for s in spans:
+                            sink.emit({"event": "span", **s.to_dict()})
 
 
 # ---------------------------------------------------------------------- #
@@ -806,39 +899,49 @@ def _execute_pipeline(
     seed_blocks: list[list[int]] | None = None,
 ) -> tuple[MappingResult | None, SweepPoint]:
     t_run = time.perf_counter()
-    snap = counters.snapshot()
+    snap = METRICS.snapshot()
     ctx = StageContext(wf=wf, platform=platform, k_prime=kp,
                        exact_limit=spec.exact_limit, memo=memo,
                        sim_options=spec.sim_options, resume=resume,
                        step1_multilevel=spec.step1_multilevel,
                        seed_blocks=seed_blocks)
     stage_times: dict[str, float] = {}
-    for name in spec.stage_names:
-        stage = get_stage(name)
-        t0 = time.perf_counter()
-        stage.run(ctx)
-        stage_times[name] = (stage_times.get(name, 0.0)
-                             + time.perf_counter() - t0)
-        if ctx.failure is not None:
-            break
-    # heuristic pipelines leave the mapping in the evaluator state (a
-    # trailing SimulateStage already materialized it when enabled)
-    _materialize_result(ctx, kp)
-    dt = time.perf_counter() - t_run
-    cache_stats = counters.delta(snap)
+    with trace_span("sweep_point", k_prime=kp, n_tasks=wf.n) as pt_span:
+        for name in spec.stage_names:
+            stage = get_stage(name)
+            t0 = time.perf_counter()
+            with trace_span(f"stage.{name}", k_prime=kp):
+                stage.run(ctx)
+            stage_times[name] = (stage_times.get(name, 0.0)
+                                 + time.perf_counter() - t0)
+            if ctx.failure is not None:
+                break
+        # heuristic pipelines leave the mapping in the evaluator state
+        # (a trailing SimulateStage already materialized it when
+        # enabled)
+        _materialize_result(ctx, kp)
+        dt = time.perf_counter() - t_run
+        METRICS.observe("sched_sweep_point_s", dt)
+        mdelta = METRICS.delta(snap)
+        cache_stats = mdelta.pop("counters", {})
+        # the sweep-point span carries its counter deltas + verdict
+        pt_span.attrs.update(cache_stats)
+        pt_span.attrs["feasible"] = ctx.result is not None
+        if ctx.result is not None:
+            pt_span.attrs["makespan"] = float(ctx.result.makespan)
     if ctx.result is not None:
         ctx.result.runtime_s = dt
         point = SweepPoint(k_prime=kp, makespan=float(ctx.result.makespan),
                            feasible=True, time_s=dt,
                            stage_times=stage_times,
-                           cache_stats=cache_stats)
+                           cache_stats=cache_stats, metrics=mdelta)
     else:
         point = SweepPoint(k_prime=kp, makespan=None, feasible=False,
                            time_s=dt, stage_times=stage_times,
                            failed_stage=ctx.failure.stage,
                            fail_reason=ctx.failure.reason,
                            memory_gap=ctx.failure.gap,
-                           cache_stats=cache_stats)
+                           cache_stats=cache_stats, metrics=mdelta)
     return ctx.result, point
 
 
@@ -892,9 +995,18 @@ def _make_pool(wf: Workflow, platform: Platform, spec: _RunSpec,
 
 
 def _pool_run(kp: int | None) -> tuple[MappingResult | None, SweepPoint]:
-    res, point = _execute_pipeline(
-        _WORKER_STATE["wf"], _WORKER_STATE["platform"],
-        _WORKER_STATE["spec"], kp, _WORKER_STATE["memo"])
+    spec = _WORKER_STATE["spec"]
+    # A fresh per-task tracer (never the fork-inherited parent tracer):
+    # the shipped span batch is exactly this sweep point's, and its tid
+    # carries the worker pid as the track name.
+    tracer = (_trc.Tracer(probe_spans=spec.probe_spans)
+              if spec.obs_enabled else None)
+    with _trc.activate_exclusive(tracer):
+        res, point = _execute_pipeline(
+            _WORKER_STATE["wf"], _WORKER_STATE["platform"],
+            spec, kp, _WORKER_STATE["memo"])
+    if tracer is not None:
+        point.spans = tracer.spans
     if res is not None:
         # Detach the workflow before the result crosses the process
         # boundary: the parent re-attaches its own (identical) copy.
@@ -908,12 +1020,15 @@ def _pool_run(kp: int | None) -> tuple[MappingResult | None, SweepPoint]:
 # the facade
 # ---------------------------------------------------------------------- #
 def _default_printer(point: SweepPoint) -> None:
+    # ``verbose`` narration goes through logging (silent until the
+    # application installs a handler; CLI entry points call
+    # ``repro.obs.setup_logging()`` for classic print-style output).
     label = f"k'={point.k_prime}" if point.k_prime is not None else "run"
     if point.feasible:
-        print(f"  {label}: makespan={point.makespan:.2f}")
+        _log.info("  %s: makespan=%.2f", label, point.makespan)
     else:
-        print(f"  {label}: infeasible "
-              f"({point.failed_stage}: {point.fail_reason})")
+        _log.info("  %s: infeasible (%s: %s)", label,
+                  point.failed_stage, point.fail_reason)
 
 
 class Scheduler:
@@ -979,13 +1094,36 @@ class Scheduler:
     def schedule(self, wf: Workflow, platform: Platform) -> ScheduleReport:
         """Run the configured pipeline; always a :class:`ScheduleReport`."""
         cfg = self.config
+        return self._with_obs(
+            {"algorithm": cfg.algorithm, "n_tasks": wf.n,
+             "workers": cfg.workers},
+            lambda: self._run_sweep(wf, platform))
+
+    def _with_obs(self, run_attrs: dict,
+                  fn: Callable[[], ScheduleReport]) -> ScheduleReport:
+        """Wrap one run in the obs session + root ``run`` span and
+        attach the run's span slice to the report."""
+        with _obs_session(self.config.obs) as (tracer, start):
+            with trace_span("run", **run_attrs):
+                report = fn()
+            if tracer is not None:
+                report.spans = list(tracer.spans[start:])
+        return report
+
+    def _run_sweep(self, wf: Workflow,
+                   platform: Platform) -> ScheduleReport:
+        cfg = self.config
         t0 = time.perf_counter()
         from .memdag import step2_impl
         from .partitioner import step1_impl
 
+        tracer = _trc.current_tracer()
         spec = _RunSpec(self.stage_names(), cfg.exact_limit,
                         cfg.sim_options, step2_impl(), step1_impl(),
-                        cfg.step1_multilevel)
+                        cfg.step1_multilevel,
+                        obs_enabled=tracer is not None,
+                        probe_spans=(tracer.probe_spans
+                                     if tracer is not None else False))
         sweep = self.sweep_values(wf, platform)
         callbacks: list[Callable[[SweepPoint], None]] = []
         if cfg.verbose:
@@ -1032,6 +1170,14 @@ class Scheduler:
                     res, point = fut.result()
                     if res is not None:
                         res.quotient.wf = wf  # re-attach (see _pool_run)
+                    # Workers recorded into *their* registries: fold the
+                    # shipped deltas into the parent's.  (Only here —
+                    # the serial path records in-process directly.)
+                    METRICS.merge({"counters": point.cache_stats,
+                                   **point.metrics})
+                    if tracer is not None and point.spans:
+                        tracer.extend(point.spans)
+                        point.spans = []  # spliced; avoid double export
                     reduce_best(res)
                     points.append(point)
                     for cb in callbacks:
@@ -1054,11 +1200,13 @@ class Scheduler:
         total = time.perf_counter() - t0
         stage_times: dict[str, float] = {}
         cache_stats: dict[str, int] = {}
+        run_metrics: dict = {}
         for p in points:
             for name, dt in p.stage_times.items():
                 stage_times[name] = stage_times.get(name, 0.0) + dt
             for name, c in p.cache_stats.items():
                 cache_stats[name] = cache_stats.get(name, 0) + c
+            _merge_metric_delta(run_metrics, p.metrics)
 
         if best is not None:
             best.runtime_s = total  # whole-sweep time, as dag_het_part did
@@ -1077,6 +1225,7 @@ class Scheduler:
             workers=cfg.workers,
             truncated=truncated,
             cache_stats=cache_stats,
+            metrics=run_metrics,
             best=best,
         )
 
@@ -1095,6 +1244,11 @@ class Scheduler:
         a :class:`ScheduleReport` (``algorithm="warm_start"``); pinned
         blocks keep their processor in any feasible result.
         """
+        return self._with_obs(
+            {"algorithm": "warm_start", "n_tasks": state.wf.n},
+            lambda: self._resume_impl(state))
+
+    def _resume_impl(self, state: ResumeState) -> ScheduleReport:
         cfg = self.config
         t0 = time.perf_counter()
         names = self._filter_toggles(
@@ -1127,6 +1281,7 @@ class Scheduler:
             total_time_s=total,
             workers=1,
             cache_stats=dict(point.cache_stats),
+            metrics=dict(point.metrics),
             best=res,
         )
 
@@ -1150,6 +1305,14 @@ class Scheduler:
         :class:`ScheduleReport` (``algorithm="seeded"``); a seed that
         no longer fits is a structured infeasibility, not an error.
         """
+        return self._with_obs(
+            {"algorithm": "seeded", "n_tasks": wf.n},
+            lambda: self._seeded_impl(wf, platform, block_of_task,
+                                      k_prime))
+
+    def _seeded_impl(self, wf: Workflow, platform: Platform,
+                     block_of_task: Sequence[int],
+                     k_prime: int | None) -> ScheduleReport:
         if len(block_of_task) != wf.n:
             raise ValueError(
                 f"block_of_task has {len(block_of_task)} entries for "
@@ -1191,6 +1354,7 @@ class Scheduler:
             total_time_s=total,
             workers=1,
             cache_stats=dict(point.cache_stats),
+            metrics=dict(point.metrics),
             best=res,
         )
 

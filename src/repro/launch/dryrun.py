@@ -23,6 +23,7 @@ Usage::
 """
 import argparse
 import json
+import logging
 import sys
 import time
 import traceback
@@ -38,6 +39,10 @@ from repro.launch.steps import (
     build_serve_step,
     build_train_step,
 )
+
+# explicit name: under ``python -m`` this module runs as __main__, and
+# a __main__ logger would sit outside the "repro" handler subtree
+_log = logging.getLogger("repro.launch.dryrun")
 
 # --- hardware model (TPU v5e target) ---------------------------------- #
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
@@ -196,13 +201,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             if max(compute_s, memory_s, collective_s) > 0 else 0.0),
     }
     if verbose:
-        print(json.dumps(
+        _log.info("%s", json.dumps(
             {k: result[k] for k in (
                 "arch", "shape", "mesh", "policy", "compile_s",
                 "per_device_gib_tpu_est", "fits_hbm", "compute_s",
                 "memory_s", "collective_s", "dominant",
                 "useful_flop_frac", "roofline_frac")},
-            indent=None), flush=True)
+            indent=None))
     return result
 
 
@@ -213,6 +218,8 @@ def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> Path:
 
 
 def main(argv=None) -> int:
+    from repro.obs import setup_logging
+    setup_logging()  # CLI entry point: bare messages on stdout
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -266,7 +273,7 @@ def main(argv=None) -> int:
         for mp in meshes:
             path = cell_path(arch, shape, mp, args.tag)
             if path.exists() and not args.force:
-                print(f"cached: {path.name}", flush=True)
+                _log.info("cached: %s", path.name)
                 continue
             try:
                 result = run_cell(arch, shape, multi_pod=mp,
@@ -280,7 +287,7 @@ def main(argv=None) -> int:
                     "status": "error", "error": repr(e),
                     "traceback": traceback.format_exc()[-2000:],
                 }
-                print(f"FAIL {arch} {shape} mp={mp}: {e!r}", flush=True)
+                _log.error("FAIL %s %s mp=%s: %r", arch, shape, mp, e)
             path.write_text(json.dumps(result, indent=2))
     return 1 if failures else 0
 

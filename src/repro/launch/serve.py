@@ -46,6 +46,8 @@ def greedy_decode(model: LM, params, prompt, new_tokens: int,
 
 
 def main(argv=None) -> int:
+    from repro.obs import setup_logging
+    _log = setup_logging()  # CLI entry point: bare messages on stdout
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", default="decode_32k")
@@ -76,9 +78,9 @@ def main(argv=None) -> int:
     t0 = time.perf_counter()
     out = greedy_decode(model, params, prompt, args.tokens, frontend)
     dt = time.perf_counter() - t0
-    print(f"generated {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.tokens / dt:.1f} tok/s)")
-    print("sample:", np.asarray(out[0])[:16].tolist())
+    _log.info("generated %s tokens in %.2fs (%.1f tok/s)",
+              out.shape, dt, args.batch * args.tokens / dt)
+    _log.info("sample: %s", np.asarray(out[0])[:16].tolist())
     return 0
 
 

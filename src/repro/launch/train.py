@@ -25,6 +25,8 @@ from repro.runtime import FailureInjector, Trainer, TrainerConfig
 
 
 def main(argv=None) -> int:
+    from repro.obs import setup_logging
+    _log = setup_logging()  # CLI entry point: bare messages on stdout
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", default="train_4k")
@@ -57,9 +59,8 @@ def main(argv=None) -> int:
         injector=injector,
     )
     hist = trainer.run()
-    print(f"steps: {len(hist['loss'])}  "
-          f"first loss: {hist['loss'][0]:.4f}  "
-          f"last loss: {hist['loss'][-1]:.4f}")
+    _log.info("steps: %d  first loss: %.4f  last loss: %.4f",
+              len(hist["loss"]), hist["loss"][0], hist["loss"][-1])
     return 0
 
 

@@ -42,6 +42,7 @@ from repro.core.dag import Workflow
 from repro.core.platform import Platform
 from repro.core.scheduler import ResumeState, Scheduler, SchedulerConfig
 from repro.core.workflows import residual_workflow
+from repro.obs.tracer import trace_span
 from repro.sim import build_specs, resolve_comm, run_engine, simulate
 
 from .events import PlatformEvent, validate_event_timeline
@@ -177,6 +178,21 @@ def freeze_prefix(
     (old index → new index, ``None`` for a lost processor); in-flight
     blocks restart, and survive *pinned* to their processor.
     """
+    with trace_span("scenario.freeze", rel=rel):
+        return _freeze_prefix(wf, mapping, platform, rel, new_platform,
+                              proc_map, comm=comm)
+
+
+def _freeze_prefix(
+    wf: Workflow,
+    mapping,
+    platform: Platform,
+    rel: float,
+    new_platform: Platform,
+    proc_map: dict[int, int | None],
+    *,
+    comm="contention-free",
+) -> FrozenPrefix:
     q = mapping.quotient
     blocks, edges = build_specs(q, platform)
     trace = run_engine(blocks, edges, resolve_comm(comm), platform,
@@ -379,7 +395,8 @@ def run_scenario(
 
         # -- replan ------------------------------------------------ #
         t0 = time.perf_counter()
-        report = pol.replan(state, cfg)
+        with trace_span("scenario.replan", policy=pol.name, t_event=te):
+            report = pol.replan(state, cfg)
         replan_times.append(time.perf_counter() - t0)
         migrations.append(_migration_record(
             te, pol.name, state, fz.old_names, report, new_platform,

@@ -55,6 +55,16 @@ from repro.core.dag import Workflow
 from repro.core.platform import Platform
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.core.workflows import WorkflowValidationError
+from repro.obs import (
+    JsonlSink,
+    ObsConfig,
+    service_virtual_events,
+    span_events,
+    write_chrome_trace,
+)
+from repro.obs import tracer as _trc
+from repro.obs.metrics import METRICS, RATIO_BOUNDARIES
+from repro.obs.tracer import trace_span
 from repro.scenario import (
     LinkDegrade,
     PlatformEvent,
@@ -86,7 +96,15 @@ class ServiceConfig:
     ``simulate`` is forced on internally: execution *is* the
     simulation).  ``plan_cache=False`` disables fingerprint seeding;
     ``cache_capacity`` bounds the LRU.  Quotas default to the empty
-    config (admit everything, plain FIFO fairness).
+    config (admit everything, plain FIFO fairness).  ``obs`` is the
+    run's :class:`~repro.obs.ObsConfig`: ``enabled`` traces the event
+    loop (submission → admission → dispatch → replan → completion,
+    with the scheduler's own spans nested under each planning call),
+    ``sink`` streams the service log + spans as JSONL, ``trace_path``
+    writes a Chrome trace at the end of the run that unifies the
+    wall-clock span tracks with the virtual-time job/utilization
+    tracks (separate clock-domain ``pid``\\ s).  All of it is inert:
+    the :class:`ServiceTrace` is bit-identical with ``obs`` on or off.
     """
 
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
@@ -94,6 +112,7 @@ class ServiceConfig:
     plan_cache: bool = True
     cache_capacity: int = 128
     name: str = "service"
+    obs: ObsConfig | None = None
 
 
 class _Job:
@@ -175,10 +194,17 @@ class WorkflowService:
         self._horizon = 0.0
         self._plan_wall: dict[str, list[float]] = {}
         self._sched_cfg = replace(self.config.scheduler, simulate=True)
+        self._sink = JsonlSink(None)  # run() opens the real one
 
     # ---------------------------------------------------------------- #
     # bookkeeping helpers
     # ---------------------------------------------------------------- #
+    def _note(self, entry: dict) -> None:
+        """Append to the deterministic service log and stream the same
+        entry to the JSONL sink (no-op sink when obs is off)."""
+        self._log.append(entry)
+        self._sink.emit({"event": "service", **entry})
+
     def _push(self, t: float, prio: int, kind: str, payload) -> None:
         heappush(self._heap, (t, prio, next(self._push_ctr), kind,
                               payload))
@@ -233,10 +259,14 @@ class WorkflowService:
                                   tenant=job.tenant, code=code,
                                   reason=reason)
         counters.bump("service_rejections")
-        self._log.append({"t": t, "kind": "reject", "job": job.seq,
+        self._note({"t": t, "kind": "reject", "job": job.seq,
                           "code": code, "reason": reason})
 
     def _admit(self, job: _Job, t: float) -> None:
+        with trace_span("service.admit", job=job.seq, t=t):
+            self._admit_impl(job, t)
+
+    def _admit_impl(self, job: _Job, t: float) -> None:
         try:
             wf = resolve_workflow(job.sub)
         except WorkflowValidationError as exc:
@@ -261,16 +291,38 @@ class WorkflowService:
         job.status = "queued"
         self.queue.push(job)
         counters.bump("service_admissions")
-        self._log.append({"t": t, "kind": "admit", "job": job.seq,
+        self._note({"t": t, "kind": "admit", "job": job.seq,
                           "tenant": job.tenant, "n_tasks": wf.n,
                           "fingerprint": job.fp.digest[:12]})
 
     # ---------------------------------------------------------------- #
     # planning (plan cache in front of the scheduler)
     # ---------------------------------------------------------------- #
+    def _wall(self, path: str, t0: float) -> None:
+        """Record one planning call's wall clock under ``path`` and in
+        the ``service_plan_latency_s`` histogram (p50/p95/p99 on the
+        report derive from it)."""
+        dt = time.perf_counter() - t0
+        self._plan_wall.setdefault(path, []).append(dt)
+        METRICS.observe("service_plan_latency_s", dt)
+
     def _plan(self, job: _Job, sub_plat: Platform):
         """Returns ``(report, path)`` with ``path`` in
         {"seeded", "cold"}; wall clocks land in ``plan_wall_s``."""
+        tr = _trc.current_tracer()
+        if tr is None:
+            return self._plan_impl(job, sub_plat)
+        snap = counters.snapshot()
+        with tr.span("service.plan", job=job.seq,
+                     n_tasks=job.wf.n) as sp:
+            rep, path = self._plan_impl(job, sub_plat)
+            # the span carries the planning call's counter deltas
+            sp.attrs.update(counters.delta(snap))
+            sp.attrs["path"] = path
+            sp.attrs["feasible"] = rep.feasible
+        return rep, path
+
+    def _plan_impl(self, job: _Job, sub_plat: Platform):
         sch = Scheduler(self._sched_cfg)
         key = None
         if self.cache is not None:
@@ -281,15 +333,20 @@ class WorkflowService:
                 rep = sch.seeded(job.wf, sub_plat,
                                  cached.block_of_task,
                                  k_prime=cached.k_prime)
-                self._plan_wall.setdefault("seeded", []).append(
-                    time.perf_counter() - t0)
+                self._wall("seeded", t0)
                 if rep.feasible:
+                    if cached.makespan:
+                        # premium the seeded plan pays over its cached
+                        # winner (≈1.0 when the seed held up)
+                        METRICS.observe(
+                            "service_makespan_premium",
+                            rep.summary.makespan / cached.makespan,
+                            boundaries=RATIO_BOUNDARIES)
                     return rep, "seeded"
                 counters.bump("service_seed_fallbacks")
         t0 = time.perf_counter()
         rep = sch.schedule(job.wf, sub_plat)
-        self._plan_wall.setdefault("cold", []).append(
-            time.perf_counter() - t0)
+        self._wall("cold", t0)
         if rep.feasible and key is not None:
             self.cache.put(key, rep.summary.block_of_task,
                            rep.summary.k_prime, rep.summary.makespan)
@@ -309,7 +366,7 @@ class WorkflowService:
         job._last_defer = key
         job.n_deferrals += 1
         counters.bump("service_deferrals")
-        self._log.append({"t": t, "kind": "defer", "job": job.seq,
+        self._note({"t": t, "kind": "defer", "job": job.seq,
                           "code": code, "reason": reason})
 
     def _fail(self, job: _Job, t: float, infeas) -> None:
@@ -322,7 +379,7 @@ class WorkflowService:
         job.infeasibility = infeas
         job.allocation = set()
         counters.bump("service_infeasible")
-        self._log.append({"t": t, "kind": "infeasible", "job": job.seq,
+        self._note({"t": t, "kind": "infeasible", "job": job.seq,
                           "stage": infeas.stage, "reason": infeas.reason})
         self._note_util(t)
 
@@ -344,6 +401,8 @@ class WorkflowService:
             job.dispatch_t = t
             job.planning_path = path
             job.k_prime = rep.summary.k_prime
+            # virtual-time wait from arrival to first dispatch
+            METRICS.observe("service_queue_wait", t - job.arrival_t)
         job.t_seg = t
         job.gen += 1
         job._skip_sig = None
@@ -354,13 +413,17 @@ class WorkflowService:
         self._push(t + sim.makespan, _PRIO_COMPLETE, "complete",
                    (job, job.gen))
         counters.bump("service_dispatches")
-        self._log.append({
+        self._note({
             "t": t, "kind": "dispatch", "job": job.seq, "path": path,
             "procs": len(job.allocation), "makespan": sim.makespan,
         })
         self._note_util(t)
 
     def _dispatch(self, t: float) -> None:
+        with trace_span("service.dispatch", t=t):
+            self._dispatch_impl(t)
+
+    def _dispatch_impl(self, t: float) -> None:
         while True:
             free = self._free()
             if not free or not len(self.queue):
@@ -433,7 +496,7 @@ class WorkflowService:
             cmap = {j: (m[c] if c is not None else None)
                     for j, c in cmap.items()}
             self._event_dicts.append(ev.to_dict())
-            self._log.append({"t": t, "kind": "event",
+            self._note({"t": t, "kind": "event",
                               "event": ev.kind,
                               "detail": ev.describe()})
         self.platform = cur
@@ -463,7 +526,7 @@ class WorkflowService:
         job._last_defer = None
         self.queue.push(job)
         counters.bump("service_displacements")
-        self._log.append({"t": t, "kind": "displaced", "job": job.seq,
+        self._note({"t": t, "kind": "displaced", "job": job.seq,
                           "residual_tasks": residual.n})
 
     def _adopt(self, job: _Job, rep, t: float, path: str) -> None:
@@ -481,7 +544,7 @@ class WorkflowService:
         job.gen += 1
         self._push(t + sim.makespan, _PRIO_COMPLETE, "complete",
                    (job, job.gen))
-        self._log.append({
+        self._note({
             "t": t, "kind": "replan", "job": job.seq, "path": path,
             "procs": len(job.allocation),
             "residual_tasks": job.wf.n,
@@ -489,6 +552,16 @@ class WorkflowService:
         })
 
     def _replan_job(self, job: _Job, t: float) -> None:
+        tr = _trc.current_tracer()
+        if tr is None:
+            return self._replan_job_impl(job, t)
+        snap = counters.snapshot()
+        with tr.span("service.replan", job=job.seq, t=t) as sp:
+            self._replan_job_impl(job, t)
+            sp.attrs.update(counters.delta(snap))
+            sp.attrs["status"] = job.status
+
+    def _replan_job_impl(self, job: _Job, t: float) -> None:
         rel = t - job.t_seg
         if rel >= job.sim.horizon:
             return  # segment already (durably) done; completion stands
@@ -523,8 +596,7 @@ class WorkflowService:
         if surv:
             t0 = time.perf_counter()
             warm = Scheduler(self._sched_cfg).resume(fz.state)
-            self._plan_wall.setdefault("replan", []).append(
-                time.perf_counter() - t0)
+            self._wall("replan", t0)
         if warm is not None and warm.feasible:
             job.wf = fz.state.wf
             job.platform = new_carve
@@ -540,8 +612,7 @@ class WorkflowService:
             t0 = time.perf_counter()
             cold = Scheduler(self._sched_cfg).schedule(fz.state.wf,
                                                       plat2)
-            self._plan_wall.setdefault("replan", []).append(
-                time.perf_counter() - t0)
+            self._wall("replan", t0)
             if cold.feasible:
                 job.wf = fz.state.wf
                 job.platform = plat2
@@ -564,12 +635,16 @@ class WorkflowService:
         job, gen = payload
         if job.status != "running" or gen != job.gen:
             return  # superseded by a replan or displacement
+        with trace_span("service.complete", job=job.seq, t=t):
+            self._complete_impl(job, t)
+
+    def _complete_impl(self, job: _Job, t: float) -> None:
         job.status = "completed"
         job.finish_t = t
         self._running.remove(job)
         job.allocation = set()
         counters.bump("service_completions")
-        self._log.append({"t": t, "kind": "complete", "job": job.seq,
+        self._note({"t": t, "kind": "complete", "job": job.seq,
                           "tenant": job.tenant})
         self._note_util(t)
         self._dispatch(t)
@@ -609,8 +684,37 @@ class WorkflowService:
 
     def run(self) -> ServiceReport:
         """Drain the virtual-time queue; always a ServiceReport."""
+        obs = self.config.obs
+        tracer = obs.make_tracer() if obs is not None else None
+        self._sink = JsonlSink(obs.sink if obs is not None else None)
+        try:
+            # activate(None) is a passthrough: an enclosing tracer (a
+            # caller tracing across service runs) keeps collecting
+            with _trc.activate(tracer):
+                report = self._run_impl()
+            if tracer is not None:
+                for s in tracer.spans:
+                    self._sink.emit({"event": "span", **s.to_dict()})
+        finally:
+            self._sink.close()
+            self._sink = JsonlSink(None)
+        if tracer is not None:
+            report.spans = list(tracer.spans)
+            if obs.trace_path is not None:
+                # one file, two clock domains: wall-clock spans under
+                # pid "wall", virtual-time job/util tracks under
+                # pid "virtual"
+                write_chrome_trace(
+                    obs.trace_path,
+                    span_events(tracer.spans)
+                    + service_virtual_events(report.trace),
+                    meta={"service": self.config.name})
+        return report
+
+    def _run_impl(self) -> ServiceReport:
         t_wall = time.perf_counter()
-        snap = counters.snapshot()
+        msnap = METRICS.snapshot()
+        snap = msnap["counters"]
         for job in self.jobs:
             self._push(job.arrival_t, _PRIO_SUBMIT, "submit", job)
         group: list[PlatformEvent] = []
@@ -647,6 +751,8 @@ class WorkflowService:
         cache_stats = counters.delta(snap)
         if self.cache is not None:
             cache_stats["service_plan_cache_size"] = len(self.cache)
+        mdelta = METRICS.delta(msnap)
+        mdelta.pop("counters", None)  # already surfaced as cache_stats
         trace = ServiceTrace(
             name=self.config.name,
             platform_name=self._home_platform.name,
@@ -664,6 +770,7 @@ class WorkflowService:
             plan_wall_s={k: list(v)
                          for k, v in sorted(self._plan_wall.items())},
             total_time_s=time.perf_counter() - t_wall,
+            metrics=mdelta,
         )
 
 
@@ -674,7 +781,16 @@ def run_service(
     config: ServiceConfig | None = None,
     *,
     cache: PlanCache | None = None,
+    obs: ObsConfig | None = None,
 ) -> ServiceReport:
-    """One-call convenience: build a :class:`WorkflowService`, run it."""
+    """One-call convenience: build a :class:`WorkflowService`, run it.
+
+    ``obs`` overrides ``config.obs`` (shortcut for tracing one run:
+    ``run_service(subs, plat, obs=ObsConfig(enabled=True,
+    trace_path="trace.json"))``).
+    """
+    if obs is not None:
+        config = replace(config if config is not None
+                         else ServiceConfig(), obs=obs)
     return WorkflowService(submissions, platform, events, config,
                            cache).run()

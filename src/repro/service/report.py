@@ -157,12 +157,24 @@ class ServiceTrace:
 
 @dataclass
 class ServiceReport:
-    """Trace + wall-clock observability for one service run."""
+    """Trace + wall-clock observability for one service run.
+
+    ``metrics`` is the run's non-counter metrics block
+    (``{"gauges": ..., "histograms": ...}``, sparse — see
+    :mod:`repro.obs.metrics`): the ``service_plan_latency_s``,
+    ``service_queue_wait`` and ``service_makespan_premium`` histograms
+    live here, and the percentile properties below derive from them.
+    ``spans`` carries the run's finished tracer spans when
+    ``ServiceConfig.obs`` enabled tracing (live objects — excluded
+    from JSON and equality).
+    """
 
     trace: ServiceTrace
     cache_stats: dict = field(default_factory=dict)
     plan_wall_s: dict = field(default_factory=dict)  # path -> [seconds]
     total_time_s: float = 0.0
+    metrics: dict = field(default_factory=dict)
+    spans: list = field(default_factory=list, repr=False, compare=False)
 
     # convenience views ------------------------------------------------ #
     @property
@@ -200,6 +212,30 @@ class ServiceReport:
             return None
         return tr.busy_proc_time / (tr.horizon * tr.n_procs)
 
+    # histogram-derived percentiles ------------------------------------ #
+    def _hist_percentiles(self, name: str) -> dict | None:
+        from repro.obs.metrics import percentiles
+
+        return percentiles(
+            self.metrics.get("histograms", {}).get(name, {}))
+
+    @property
+    def plan_latency_percentiles(self) -> dict | None:
+        """``{"p50": ..., "p95": ..., "p99": ...}`` of wall-clock
+        planning latency (seconds, all paths), or ``None``."""
+        return self._hist_percentiles("service_plan_latency_s")
+
+    @property
+    def queue_wait_percentiles(self) -> dict | None:
+        """p50/p95/p99 of virtual-time arrival→dispatch wait."""
+        return self._hist_percentiles("service_queue_wait")
+
+    @property
+    def makespan_premium_percentiles(self) -> dict | None:
+        """p50/p95/p99 of the seeded-plan makespan premium (ratio vs
+        the cached winner; ``None`` without plan-cache hits)."""
+        return self._hist_percentiles("service_makespan_premium")
+
     # serialization ---------------------------------------------------- #
     def to_dict(self) -> dict:
         return {
@@ -208,6 +244,7 @@ class ServiceReport:
             "plan_wall_s": {k: list(v)
                             for k, v in self.plan_wall_s.items()},
             "total_time_s": self.total_time_s,
+            "metrics": dict(self.metrics),
         }
 
     @classmethod
@@ -218,6 +255,8 @@ class ServiceReport:
             plan_wall_s={k: list(v)
                          for k, v in d.get("plan_wall_s", {}).items()},
             total_time_s=float(d.get("total_time_s", 0.0)),
+            # absent on pre-PR-8 payloads: default to empty
+            metrics=dict(d.get("metrics", {})),
         )
 
     def to_json(self, *, indent: int | None = None) -> str:

@@ -57,6 +57,8 @@ from __future__ import annotations
 import heapq
 from dataclasses import dataclass, field
 
+from repro.obs.tracer import trace_span
+
 from .report import SimEvent
 
 __all__ = ["BlockSpec", "EdgeSpec", "EngineCheckpoint", "EngineTrace",
@@ -242,6 +244,17 @@ def run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
     already completed.  Raises ``ValueError`` when the block graph is
     cyclic (some block can never start).
     """
+    # one span per replay (wall-clock cost of the virtual-time engine)
+    with trace_span("sim.run_engine", n_blocks=len(blocks),
+                    n_edges=len(edges)):
+        return _run_engine(blocks, edges, comm, platform,
+                           record_events=record_events,
+                           stop_time=stop_time)
+
+
+def _run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
+                platform, *, record_events: bool = True,
+                stop_time: float | None = None) -> EngineTrace:
     by_vid = {b.vid: b for b in blocks}
     if len(by_vid) != len(blocks):
         raise ValueError("duplicate block vid")

@@ -5,6 +5,17 @@ import numpy as np
 import pytest
 
 from repro.core import Platform, Processor, Workflow
+from repro.obs.metrics import METRICS
+
+
+@pytest.fixture(autouse=True)
+def _isolate_metrics():
+    """Snapshot/restore the global metrics registry (COUNTERS included
+    — it aliases ``METRICS.counters``) around every test, so tests
+    that read counter deltas never see another test's increments."""
+    snap = METRICS.snapshot()
+    yield
+    METRICS.restore(snap)
 
 
 @pytest.fixture

@@ -220,11 +220,17 @@ class TestReportingChannel:
                  on_sweep_result=seen.append)
         assert [p.k_prime for p in seen] == [1, 4, 9]
 
-    def test_verbose_prints_through_the_same_channel(self, capsys):
+    def test_verbose_prints_through_the_same_channel(self, caplog):
+        # since PR 8 the default printer narrates through the module
+        # logger (CLI entry points call repro.obs.setup_logging() to
+        # put it back on stdout)
+        import logging
+
         plat = default_cluster()
         wf = generate_workflow("blast", 120, seed=4, platform=plat)
-        schedule(wf, plat, kprime=[1, 4], verbose=True)
-        out = capsys.readouterr().out
+        with caplog.at_level(logging.INFO, logger="repro.core.scheduler"):
+            schedule(wf, plat, kprime=[1, 4], verbose=True)
+        out = caplog.text
         assert "k'=1" in out and "k'=4" in out and "makespan" in out
 
 

@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Top-N slowest spans of a Chrome trace or span JSONL, as a table.
+
+Reads either output shape of :mod:`repro.obs.export`:
+
+* a Chrome trace JSON (``ObsConfig.trace_path``) — matched ``B``/``E``
+  pairs are re-joined into spans per ``(pid, tid)`` track, ``X``
+  complete events count as-is;
+* a JSONL sink file (``ObsConfig.sink``) — lines with
+  ``"event": "span"`` carry ``ts``/``dur`` directly.
+
+Usage::
+
+    python tools/trace_view.py trace.json [-n 20] [--self]
+
+``--self`` ranks by *self time* (duration minus the time covered by
+child spans on the same track) instead of total duration — the number
+that answers "where did the time actually go" for nested spans.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+_US = 1e6
+
+
+def _spans_from_chrome(doc: dict) -> list[dict]:
+    """Re-join B/E pairs (and take X events verbatim) into span dicts
+    with seconds-domain ``ts``/``dur``."""
+    spans: list[dict] = []
+    stacks: dict[tuple, list[dict]] = {}
+    for e in doc.get("traceEvents", []):
+        key = (e.get("pid", ""), e.get("tid", ""))
+        ph = e.get("ph")
+        if ph == "B":
+            stacks.setdefault(key, []).append({
+                "name": e["name"], "ts": e["ts"] / _US,
+                "pid": key[0], "tid": key[1],
+                "depth": len(stacks.get(key, ())) - 1
+                if key in stacks else 0,
+                "attrs": e.get("args", {}),
+            })
+        elif ph == "E":
+            stack = stacks.get(key)
+            if stack:
+                sp = stack.pop()
+                sp["depth"] = len(stack)
+                sp["dur"] = e["ts"] / _US - sp["ts"]
+                spans.append(sp)
+        elif ph == "X":
+            spans.append({
+                "name": e["name"], "ts": e["ts"] / _US,
+                "dur": e.get("dur", 0.0) / _US,
+                "pid": key[0], "tid": key[1], "depth": 0,
+                "attrs": e.get("args", {}),
+            })
+    return spans
+
+
+def _spans_from_jsonl(path: Path) -> list[dict]:
+    spans = []
+    for line in path.read_text().splitlines():
+        if not line.strip():
+            continue
+        rec = json.loads(line)
+        if rec.get("event") == "span":
+            rec.setdefault("pid", "wall")
+            rec.setdefault("attrs", {})
+            spans.append(rec)
+    return spans
+
+
+def load_spans(path: Path) -> list[dict]:
+    if path.suffix == ".jsonl":
+        return _spans_from_jsonl(path)
+    return _spans_from_chrome(json.loads(path.read_text()))
+
+
+def add_self_time(spans: list[dict]) -> None:
+    """``self_s`` = duration minus time covered by direct children on
+    the same track (overlap-clipped, so malformed input can't go
+    negative)."""
+    by_track: dict[tuple, list[dict]] = {}
+    for s in spans:
+        by_track.setdefault((s.get("pid"), s.get("tid")), []).append(s)
+    for track in by_track.values():
+        track.sort(key=lambda s: (s["ts"], -s["dur"]))
+        for s in track:
+            child_time = 0.0
+            t_end = s["ts"] + s["dur"]
+            depth = s.get("depth", 0)
+            for c in track:
+                if c is s or c.get("depth", 0) != depth + 1:
+                    continue
+                lo = max(s["ts"], c["ts"])
+                hi = min(t_end, c["ts"] + c["dur"])
+                if hi > lo:
+                    child_time += hi - lo
+            s["self_s"] = max(0.0, s["dur"] - child_time)
+
+
+def format_table(spans: list[dict], n: int, by_self: bool) -> str:
+    key = "self_s" if by_self else "dur"
+    top = sorted(spans, key=lambda s: s.get(key, 0.0), reverse=True)[:n]
+    total = sum(s.get(key, 0.0) for s in spans) or 1.0
+    header = (f"{'dur_ms':>10}  {'self_ms':>10}  {'%':>5}  "
+              f"{'track':<24} span")
+    lines = [header, "-" * len(header)]
+    for s in top:
+        attrs = s.get("attrs") or {}
+        detail = " ".join(f"{k}={v}" for k, v in list(attrs.items())[:4])
+        name = s["name"] + (f"  [{detail}]" if detail else "")
+        lines.append(
+            f"{s['dur'] * 1e3:>10.3f}  "
+            f"{s.get('self_s', s['dur']) * 1e3:>10.3f}  "
+            f"{100 * s.get(key, 0.0) / total:>5.1f}  "
+            f"{str(s.get('tid', '')):<24} "
+            f"{'  ' * s.get('depth', 0)}{name}")
+    lines.append(f"({len(spans)} spans total; "
+                 f"ranked by {'self' if by_self else 'total'} time)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Top-N slowest spans of a repro.obs trace")
+    ap.add_argument("trace", type=Path,
+                    help="Chrome trace .json or sink .jsonl")
+    ap.add_argument("-n", type=int, default=15, help="rows to show")
+    ap.add_argument("--self", dest="by_self", action="store_true",
+                    help="rank by self time (minus child spans)")
+    args = ap.parse_args(argv)
+    spans = load_spans(args.trace)
+    if not spans:
+        print(f"no spans in {args.trace}", file=sys.stderr)
+        return 1
+    add_self_time(spans)
+    print(format_table(spans, args.n, args.by_self))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
