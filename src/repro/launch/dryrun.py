@@ -80,6 +80,35 @@ def build(arch: str, shape_name: str, mesh, **kw):
     return build_serve_step(arch, shape_name, mesh, **kw)
 
 
+def _write_hlo(save_hlo: Path, hlo_text: str) -> Path:
+    """Write compressed HLO next to the cell JSON.
+
+    ``save_hlo`` is the codec-less base path (``<cell>.hlo``); the
+    codec suffix is appended here.  zstandard is optional (not part of
+    the baked toolchain) — fall back to stdlib gzip so a missing
+    compressor never fails the cell.  Returns the path written.
+    """
+    try:
+        import zstandard
+    except ImportError:
+        import gzip
+        out = save_hlo.with_name(save_hlo.name + ".gz")
+        out.write_bytes(gzip.compress(hlo_text.encode(), compresslevel=6))
+    else:
+        out = save_hlo.with_name(save_hlo.name + ".zst")
+        out.write_bytes(
+            zstandard.ZstdCompressor(level=6).compress(hlo_text.encode()))
+    return out
+
+
+_REPO_ROOT = str(Path(__file__).resolve().parents[3])
+
+
+def _sanitize_traceback(tb: str) -> str:
+    """Relativize repo paths so committed artifacts stay machine-neutral."""
+    return tb.replace(_REPO_ROOT + os.sep, "")
+
+
 def _spec_args(bundle):
     s = bundle.input_specs
     if "batch" in s:                       # train
@@ -114,10 +143,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     if save_hlo is not None:
-        import zstandard
-        save_hlo.write_bytes(
-            zstandard.ZstdCompressor(level=6).compress(
-                hlo_text.encode()))
+        _write_hlo(save_hlo, hlo_text)
     hlo = analyze_hlo(hlo_text)
     coll = hlo.collectives
 
@@ -211,6 +237,18 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     return result
 
 
+def _cached_ok(path: Path) -> bool:
+    """True iff the cached cell JSON records a successful run.
+
+    Error cells (and unreadable files) are treated as stale so a fixed
+    environment regenerates them without needing ``--force``.
+    """
+    try:
+        return json.loads(path.read_text()).get("status") == "ok"
+    except (OSError, ValueError):
+        return False
+
+
 def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> Path:
     mesh = "2x16x16" if multi_pod else "16x16"
     suffix = f"_{tag}" if tag else ""
@@ -273,19 +311,22 @@ def main(argv=None) -> int:
         for mp in meshes:
             path = cell_path(arch, shape, mp, args.tag)
             if path.exists() and not args.force:
-                _log.info("cached: %s", path.name)
-                continue
+                if _cached_ok(path):
+                    _log.info("cached: %s", path.name)
+                    continue
+                _log.info("stale error cell, re-running: %s", path.name)
             try:
                 result = run_cell(arch, shape, multi_pod=mp,
                                   overrides=overrides or None,
-                                  save_hlo=path.with_suffix(".hlo.zst"))
+                                  save_hlo=path.with_suffix(".hlo"))
             except Exception as e:  # noqa: BLE001 - record and continue
                 failures += 1
                 result = {
                     "arch": arch, "shape": shape,
                     "mesh": "2x16x16" if mp else "16x16",
                     "status": "error", "error": repr(e),
-                    "traceback": traceback.format_exc()[-2000:],
+                    "traceback": _sanitize_traceback(
+                        traceback.format_exc())[-2000:],
                 }
                 _log.error("FAIL %s %s mp=%s: %r", arch, shape, mp, e)
             path.write_text(json.dumps(result, indent=2))

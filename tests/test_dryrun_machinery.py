@@ -83,6 +83,50 @@ class TestHloAnalyzer:
         assert st.bytes_accessed < 64 * (8 * 256 * 4) * 12
 
 
+class TestCellCaching:
+    """Cache + artifact hygiene for launch/dryrun.py (no compilation)."""
+
+    def test_ok_cell_is_cached(self, tmp_path):
+        from repro.launch.dryrun import _cached_ok
+        p = tmp_path / "cell.json"
+        p.write_text('{"status": "ok", "arch": "a"}')
+        assert _cached_ok(p)
+
+    def test_error_cell_is_stale(self, tmp_path):
+        from repro.launch.dryrun import _cached_ok
+        p = tmp_path / "cell.json"
+        p.write_text('{"status": "error", "error": "boom"}')
+        assert not _cached_ok(p)
+
+    def test_unreadable_cell_is_stale(self, tmp_path):
+        from repro.launch.dryrun import _cached_ok
+        p = tmp_path / "cell.json"
+        p.write_text("{truncated")
+        assert not _cached_ok(p)
+        assert not _cached_ok(tmp_path / "missing.json")
+
+    def test_write_hlo_survives_missing_zstandard(self, tmp_path):
+        """zstandard is optional: the gzip fallback must round-trip."""
+        import gzip
+        from repro.launch.dryrun import _write_hlo
+        out = _write_hlo(tmp_path / "cell.hlo", "HloModule m")
+        assert out.exists()
+        if out.suffix == ".gz":
+            assert gzip.decompress(out.read_bytes()) == b"HloModule m"
+        else:  # zstandard present in this environment
+            import zstandard
+            assert zstandard.ZstdDecompressor().decompress(
+                out.read_bytes()) == b"HloModule m"
+
+    def test_traceback_paths_relativized(self):
+        from repro.launch.dryrun import _REPO_ROOT, _sanitize_traceback
+        tb = (f'  File "{_REPO_ROOT}/src/repro/launch/dryrun.py", '
+              'line 1, in main\n')
+        clean = _sanitize_traceback(tb)
+        assert _REPO_ROOT not in clean
+        assert 'File "src/repro/launch/dryrun.py"' in clean
+
+
 class TestStepBuilders:
     def test_train_bundle_lowers_and_analyzes(self):
         mesh = make_local_mesh(1, 1)
