@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: verify test fast bench bench-large bench-sweep bench-sim \
 	bench-scenario bench-service bench-step1 bench-step2 bench-obs \
-	docs-check
+	bench-throughput docs-check
 
 # tier-1 verification (ROADMAP.md) + executable-docs check
 verify:
@@ -67,3 +67,9 @@ bench-service:
 # asserted bit-identical -> BENCH_runtime.json ("obs")
 bench-obs:
 	python -m benchmarks.bench_obs
+
+# steady-state throughput: replicated-vs-unreplicated instances/s per
+# n=1000 family, sustained-replay latency p50/p99, offered-rate ladder
+# with the saturation point -> BENCH_runtime.json ("throughput")
+bench-throughput:
+	python -m benchmarks.bench_throughput

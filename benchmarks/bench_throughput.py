@@ -1,0 +1,153 @@
+"""Steady-state throughput: replication pay-off and the saturation knee.
+
+Two sub-benches, both landing under the ``"throughput"`` tier of
+``BENCH_runtime.json`` (``make bench-throughput``):
+
+* **replication** — each n=1000 family is planned for sustained
+  traffic with a deliberately coarse partition (k'=3: a fine partition
+  would consume every big-memory C2 processor and leave nothing to
+  replicate onto).  Headline numbers per family: the replicated
+  instances/s over the unreplicated steady-state rate (the acceptance
+  bar is ≥1.5x with ≥2 replica groups on at least one family) and the
+  p50/p99 per-instance latency of a sustained replay at 80% of the
+  plan rate — read off the ``sustained_instance_latency`` obs
+  histogram, not recomputed.
+
+* **saturation** — one family's plan replayed against an offered-rate
+  ladder spanning the analytic sustainable rate, through the plan
+  cache (the first rung plans cold, the rest seed).  Headline numbers:
+  achieved rate and latency percentiles per rung, and the saturation
+  point — the first offered rate the pipeline can no longer keep up
+  with (achieved < 95% of offered).
+
+CSV rows follow the ``name,value,derived`` contract of
+``benchmarks.run``; the JSON tier is rewritten after each sub-bench so
+a partial run still leaves usable data.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import default_cluster, generate_workflow
+from repro.service import PlanCache, run_sustained
+from repro.throughput import plan_throughput, replicate_plan
+
+from .bench_runtime import _load_results, _write_results
+from .common import emit
+
+#: coarse on purpose — small k' leaves dominating processors free, so
+#: replication has room (see the module docstring)
+KPRIME = [3]
+FAMILIES = ["genome", "blast", "montage", "seismology"]
+
+
+def replication(n: int = 1000, seed: int = 1) -> dict:
+    """Replicated vs. unreplicated sustainable rate, per family."""
+    plat = default_cluster()
+    out: dict[str, dict] = {}
+    for fam in FAMILIES:
+        wf = generate_workflow(fam, n, seed=seed, platform=plat)
+        tr = plan_throughput(wf, plat, kprime=KPRIME, workers=1)
+        if not tr.feasible:
+            emit(f"throughput.repl.{fam}.feasible", 0)
+            out[fam] = {"feasible": False}
+            continue
+        unrep = replicate_plan(tr.best, plat, max_replicas=1)
+        improvement = tr.plan.rate / unrep.rate
+        rep = run_sustained(wf, plat, rate=0.8 * tr.plan.rate,
+                            n_instances=24, seed=seed, kprime=KPRIME)
+        pct = rep.instance_latency_percentiles or {}
+        emit(f"throughput.repl.{fam}.groups", tr.plan.n_replicas)
+        emit(f"throughput.repl.{fam}.rate", tr.plan.rate,
+             "instances per time unit")
+        emit(f"throughput.repl.{fam}.improvement", improvement,
+             "vs unreplicated; target >= 1.5x somewhere")
+        emit(f"throughput.repl.{fam}.achieved", rep.instances_per_s,
+             "sustained replay at 0.8x plan rate")
+        emit(f"throughput.repl.{fam}.latency_p50", pct.get("p50"))
+        emit(f"throughput.repl.{fam}.latency_p99", pct.get("p99"))
+        out[fam] = {
+            "feasible": True,
+            "k_prime": tr.k_prime,
+            "groups": tr.plan.n_replicas,
+            "period": tr.plan.period,
+            "rate": tr.plan.rate,
+            "unreplicated_rate": unrep.rate,
+            "improvement": improvement,
+            "achieved_rate": rep.instances_per_s,
+            "latency_p50": pct.get("p50"),
+            "latency_p99": pct.get("p99"),
+            "memory_feasible": rep.pipelined.memory.feasible,
+        }
+    return out
+
+
+def saturation(family: str = "genome", n: int = 1000,
+               seed: int = 1) -> dict:
+    """Offered-rate ladder through the plan cache: the latency knee."""
+    plat = default_cluster()
+    wf = generate_workflow(family, n, seed=seed, platform=plat)
+    tr = plan_throughput(wf, plat, kprime=KPRIME, workers=1)
+    cache = PlanCache()
+    rows = []
+    sat_point = None
+    for frac in (0.3, 0.6, 0.9, 1.1):
+        offered = frac * tr.plan.rate
+        rep = run_sustained(wf, plat, rate=offered, n_instances=32,
+                            seed=seed, cache=cache, kprime=KPRIME)
+        pct = rep.instance_latency_percentiles or {}
+        achieved = rep.instances_per_s
+        saturated = achieved < 0.95 * offered
+        if saturated and sat_point is None:
+            sat_point = offered
+        rows.append({
+            "offered": offered,
+            "fraction_of_plan_rate": frac,
+            "achieved": achieved,
+            "latency_p50": pct.get("p50"),
+            "latency_p99": pct.get("p99"),
+            "saturated": saturated,
+            "planning_path": rep.jobs[0].planning_path,
+        })
+        emit(f"throughput.sat.{family}.{frac:g}x.achieved", achieved,
+             f"offered {offered:.6g}")
+        emit(f"throughput.sat.{family}.{frac:g}x.latency_p99",
+             pct.get("p99"))
+    emit(f"throughput.sat.{family}.plan_rate", tr.plan.rate)
+    emit(f"throughput.sat.{family}.saturation_point",
+         sat_point if sat_point is not None else float("nan"),
+         "first offered rate the pipeline cannot sustain")
+    return {
+        "family": family,
+        "plan_rate": tr.plan.rate,
+        "groups": tr.plan.n_replicas,
+        "ladder": rows,
+        "saturation_point": sat_point,
+    }
+
+
+def run(write_json: bool = True) -> dict:
+    results = _load_results()
+    tier = results.setdefault("throughput", {})
+    tier["replication"] = replication()
+    if write_json:
+        _write_results(results)
+    tier["saturation"] = saturation()
+    if write_json:
+        _write_results(results)
+    return tier
+
+
+if __name__ == "__main__":
+    out = run()
+    winners = [(f, r) for f, r in out["replication"].items()
+               if r.get("feasible") and r["groups"] >= 2
+               and r["improvement"] >= 1.5]
+    if winners:
+        f, r = max(winners, key=lambda fr: fr[1]["improvement"])
+        print(f"# replication: {r['improvement']:.2f}x instances/s "
+              f"with {r['groups']} groups on {f} (PASS)",
+              file=sys.stderr)
+    else:
+        print("# replication: no family reached 1.5x with >=2 groups "
+              "(MISS)", file=sys.stderr)

@@ -404,6 +404,7 @@ class StageContext:
     result: MappingResult | None = None
     failure: StageFailure | None = None
     sim_options: dict | None = None         # simulate-stage kwargs
+    throughput_options: dict | None = None  # throughput-stage kwargs
     resume: ResumeState | None = None       # warm_start-stage input
     pinned: set[int] = field(default_factory=set)  # vids frozen in place
     step1_multilevel: bool = False          # multilevel Step-1 opt-in
@@ -703,6 +704,53 @@ class SimulateStage:
             ctx.result, ctx.platform, **(ctx.sim_options or {}))
 
 
+class ThroughputStage:
+    """Post-pipeline steady-state throughput analysis
+    (:mod:`repro.throughput`): replicate the mapped block groups onto
+    idle processors and price the sustainable instance rate
+    (``extras["throughput"]``, a
+    :class:`~repro.throughput.ThroughputPlan`).
+
+    Options come from ``SchedulerConfig.throughput_options``
+    (``max_replicas``, ``include_comm``, ``latency_bound``).  A
+    ``latency_bound`` the *unreplicated* plan already violates is a
+    structured :class:`StageFailure` — the k' attempt is infeasible for
+    sustained traffic even though a one-shot mapping exists, which is
+    exactly how the sweep optimizes replication count and k' jointly.
+    Each attempt's rate/replica-count/period land as single-observation
+    histograms in the sweep point's ``metrics`` block (histogram deltas
+    are always present, unlike unchanged gauges), so rate-maximizing
+    selection (:func:`repro.throughput.plan_throughput`) can read them
+    per k'.
+    """
+
+    name = "throughput"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        _materialize_result(ctx, ctx.k_prime)
+        if ctx.result is None:
+            return
+        from repro import throughput as _tp  # deferred, like simulate
+
+        opts = dict(ctx.throughput_options or {})
+        plan = _tp.replicate_plan(ctx.result, ctx.platform, **opts)
+        bound = opts.get("latency_bound")
+        if bound is not None and plan.groups[0].latency > bound:
+            ctx.failure = StageFailure(
+                self.name,
+                f"per-instance latency {plan.groups[0].latency:.6g} "
+                f"exceeds bound {bound:.6g} at k'={ctx.k_prime}",
+                None,
+            )
+            ctx.result = None
+            return
+        ctx.result.extras["throughput"] = plan
+        METRICS.observe("throughput_rate", plan.rate)
+        METRICS.observe("throughput_replicas", float(plan.n_replicas))
+        METRICS.observe("throughput_period", plan.period)
+
+
 _STAGES: dict[str, Stage] = {}
 
 #: algorithm name -> pipeline (tuple of registered stage names)
@@ -738,7 +786,8 @@ def register_pipeline(algorithm: str, stage_names: Sequence[str]) -> None:
 
 for _stage in (PartitionStage(), AssignStage(), MergeStage(),
                SwapStage(), IdleMoveStage(), PackStage(),
-               SimulateStage(), WarmStartStage(), SeedPartitionStage()):
+               SimulateStage(), WarmStartStage(), SeedPartitionStage(),
+               ThroughputStage()):
     register_stage(_stage)
 register_pipeline("dag_het_part",
                   ("partition", "assign", "merge", "swap", "idle_moves",
@@ -752,6 +801,16 @@ register_pipeline("warm_start",
 register_pipeline("seeded",
                   ("seed_partition", "assign", "merge", "swap",
                    "idle_moves", "simulate"))
+# Sustained-traffic planning: the four-step heuristic plus steady-state
+# replication/rate analysis per k' (repro.throughput reads the per-point
+# rate metrics to pick the rate-maximizing attempt).
+register_pipeline("throughput",
+                  ("partition", "assign", "merge", "swap", "idle_moves",
+                   "simulate", "throughput"))
+# Plan-cache hits of the sustained path: seeded Steps 2-4, same analysis.
+register_pipeline("throughput_seeded",
+                  ("seed_partition", "assign", "merge", "swap",
+                   "idle_moves", "simulate", "throughput"))
 
 
 # ---------------------------------------------------------------------- #
@@ -798,6 +857,11 @@ class SchedulerConfig:
     stages: Sequence[str] | None = None
     simulate: bool = False
     sim_options: dict | None = None
+    #: keyword dict for the ``throughput`` stage (``max_replicas``,
+    #: ``include_comm``, ``latency_bound``); only algorithms whose
+    #: pipeline includes the stage (``throughput`` /
+    #: ``throughput_seeded``) read it
+    throughput_options: dict | None = None
     obs: ObsConfig | None = None
     #: opt into multilevel Step-1 partitioning (coarsen → partition →
     #: uncoarsen).  Changes cuts — hence makespans — by design, so it is
@@ -826,6 +890,7 @@ class _RunSpec:
     stage_names: tuple[str, ...]
     exact_limit: int
     sim_options: dict | None = None
+    throughput_options: dict | None = None
     step2_impl: str = "auto"
     step1_impl: str = "auto"
     step1_multilevel: bool = False
@@ -902,7 +967,9 @@ def _execute_pipeline(
     snap = METRICS.snapshot()
     ctx = StageContext(wf=wf, platform=platform, k_prime=kp,
                        exact_limit=spec.exact_limit, memo=memo,
-                       sim_options=spec.sim_options, resume=resume,
+                       sim_options=spec.sim_options,
+                       throughput_options=spec.throughput_options,
+                       resume=resume,
                        step1_multilevel=spec.step1_multilevel,
                        seed_blocks=seed_blocks)
     stage_times: dict[str, float] = {}
@@ -1119,7 +1186,8 @@ class Scheduler:
 
         tracer = _trc.current_tracer()
         spec = _RunSpec(self.stage_names(), cfg.exact_limit,
-                        cfg.sim_options, step2_impl(), step1_impl(),
+                        cfg.sim_options, cfg.throughput_options,
+                        step2_impl(), step1_impl(),
                         cfg.step1_multilevel,
                         obs_enabled=tracer is not None,
                         probe_spans=(tracer.probe_spans
@@ -1258,6 +1326,7 @@ class Scheduler:
         from .partitioner import step1_impl
 
         spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options,
+                        cfg.throughput_options,
                         step2_impl(), step1_impl(), cfg.step1_multilevel)
         res, point = _execute_pipeline(state.wf, state.platform, spec,
                                        None, {}, resume=state)
@@ -1331,6 +1400,7 @@ class Scheduler:
         from .partitioner import step1_impl
 
         spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options,
+                        cfg.throughput_options,
                         step2_impl(), step1_impl(), cfg.step1_multilevel)
         res, point = _execute_pipeline(wf, platform, spec,
                                        k_prime, {}, seed_blocks=seed)

@@ -123,12 +123,27 @@ def service_virtual_events(trace, *, pid: str = "virtual",
 
 
 def sim_proc_events(sim, *, pid: str = "sim", unit_s: float = 1.0,
-                    t_offset: float = 0.0) -> list[dict]:
+                    t_offset: float = 0.0,
+                    stride: int | None = None) -> list[dict]:
     """Per-processor ``X`` tracks from a :class:`repro.sim.SimReport`
     (or anything exposing ``.events`` of ``SimEvent``'s shape).
     ``t_offset`` shifts the segment onto a service/scenario timeline.
+
+    ``stride`` decodes pipelined multi-instance replays
+    (:func:`repro.throughput.simulate_pipelined` lowers instance ``i``'s
+    block ``v`` to vertex ``i*stride + v``, and its own report exposes
+    the stride): slices are named ``i{instance}:b{block}`` and carry
+    ``instance`` in their args, so per-instance overlap on one
+    processor track is readable — and ``tools/trace_view.py
+    --per-instance`` can split tracks per instance.
     """
     scale = unit_s * _US
+
+    def decode(v: int) -> tuple[int | None, int]:
+        if stride is None:
+            return None, v
+        return v // stride, v % stride
+
     open_at: dict[tuple, float] = {}
     ev: list[dict] = []
     for e in sim.events:
@@ -137,24 +152,37 @@ def sim_proc_events(sim, *, pid: str = "sim", unit_s: float = 1.0,
         elif e.kind == "task_finish":
             t0 = open_at.pop(("t", e.vertex), None)
             if t0 is not None:
+                inst, base = decode(e.vertex)
+                args = {"vertex": base}
+                name = f"block {base}"
+                if inst is not None:
+                    args["instance"] = inst
+                    name = f"i{inst}:b{base}"
                 ev.append({
-                    "name": f"block {e.vertex}", "ph": "X",
+                    "name": name, "ph": "X",
                     "ts": (t0 + t_offset) * scale,
                     "dur": (e.time - t0) * scale,
                     "pid": pid, "tid": f"proc:{e.proc}", "cat": "task",
-                    "args": {"vertex": e.vertex},
+                    "args": args,
                 })
         elif e.kind == "transfer_start":
             open_at[("x", e.edge)] = e.time
         elif e.kind == "transfer_finish":
             t0 = open_at.pop(("x", e.edge), None)
             if t0 is not None:
+                inst, src = decode(e.edge[0])
+                _, dst = decode(e.edge[1])
+                args = {"edge": [src, dst]}
+                name = f"xfer {src}→{dst}"
+                if inst is not None:
+                    args["instance"] = inst
+                    name = f"i{inst}:xfer {src}→{dst}"
                 ev.append({
-                    "name": f"xfer {e.edge[0]}→{e.edge[1]}", "ph": "X",
+                    "name": name, "ph": "X",
                     "ts": (t0 + t_offset) * scale,
                     "dur": (e.time - t0) * scale,
                     "pid": pid, "tid": "transfers", "cat": "transfer",
-                    "args": {"edge": list(e.edge)},
+                    "args": args,
                 })
     return ev
 

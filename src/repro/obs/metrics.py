@@ -94,6 +94,12 @@ class Histogram:
         if value > self.max:
             self.max = value
 
+    @property
+    def mean(self) -> float | None:
+        """Exact mean of every observation (``None`` when empty) —
+        ``sum``/``count`` ride along precisely for this."""
+        return self.sum / self.count if self.count else None
+
     # ------------------------------------------------------------ #
     def to_dict(self) -> dict:
         """Plain-dict form (JSON- and pickle-friendly)."""

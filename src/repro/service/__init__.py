@@ -35,6 +35,12 @@ whole platform free carries the scheduler's structured
 one submission at t=0 with no events and empty quotas reproduces
 ``Scheduler(cfg).schedule(wf, platform)`` with ``simulate=True``
 bit-exactly.
+
+Sustained admission of *repeat* arrivals of one workflow — plan once
+through the cache, replicate onto idle processors, replay the whole
+stream in one pipelined simulation — is :func:`run_sustained` (built
+on :mod:`repro.throughput`); the report carries instances/s, the
+per-instance latency histogram and the saturation rate.
 """
 from __future__ import annotations
 
@@ -48,6 +54,7 @@ from .loop import ServiceConfig, WorkflowService, run_service
 from .plancache import CachedPlan, PlanCache
 from .report import JobRecord, ServiceReport, ServiceTrace
 from .submission import Deferral, Rejection, Submission, resolve_workflow
+from .sustained import run_sustained
 
 __all__ = [
     "CachedPlan",
@@ -68,4 +75,5 @@ __all__ = [
     "platform_signature",
     "resolve_workflow",
     "run_service",
+    "run_sustained",
 ]

@@ -18,12 +18,19 @@ is the right signal.  Hits/misses/stores are counted through
 :mod:`repro.core.counters` (``service_cache_hits`` /
 ``service_cache_misses`` / ``service_cache_stores``) and surface in
 ``ServiceReport.cache_stats``.  Counters never influence control flow.
+
+The cache also persists: :meth:`PlanCache.save` writes the whole store
+(keys, partitions, LRU order) as JSON and :meth:`PlanCache.load` brings
+it back, so a service restart — or a benchmark's warm phase — starts
+with yesterday's working set instead of a cold sweep per fingerprint.
 """
 from __future__ import annotations
 
 import hashlib
+import json
 from collections import OrderedDict
 from dataclasses import dataclass
+from pathlib import Path
 
 from repro.core import counters
 from repro.core.platform import Platform
@@ -95,3 +102,49 @@ class PlanCache:
             "evictions": self._evictions,
             "hits": sum(p.hits for p in self._store.values()),
         }
+
+    # persistence --------------------------------------------------- #
+    def save(self, path) -> None:
+        """Write the cache to ``path`` as JSON, LRU order preserved
+        (first entry = least recently used, evicted first on reload
+        into a smaller cache)."""
+        payload = {
+            "version": 1,
+            "capacity": self.capacity,
+            "entries": [
+                {
+                    "key": key,
+                    "block_of_task": list(plan.block_of_task),
+                    "k_prime": plan.k_prime,
+                    "makespan": plan.makespan,
+                    "hits": plan.hits,
+                }
+                for key, plan in self._store.items()
+            ],
+        }
+        Path(path).write_text(json.dumps(payload, indent=1))
+
+    @classmethod
+    def load(cls, path, capacity: int | None = None) -> "PlanCache":
+        """Rebuild a cache from :meth:`save` output.  ``capacity``
+        overrides the saved bound (excess entries evict LRU-first);
+        loading counts neither hits nor stores."""
+        payload = json.loads(Path(path).read_text())
+        version = payload.get("version")
+        if version != 1:
+            raise ValueError(
+                f"unsupported plan-cache file version {version!r}")
+        cache = cls(capacity if capacity is not None
+                    else int(payload["capacity"]))
+        for e in payload["entries"]:
+            cache._store[e["key"]] = CachedPlan(
+                block_of_task=[int(b) for b in e["block_of_task"]],
+                k_prime=(int(e["k_prime"])
+                         if e["k_prime"] is not None else None),
+                makespan=float(e["makespan"]),
+                hits=int(e.get("hits", 0)),
+            )
+            while len(cache._store) > cache.capacity:
+                cache._store.popitem(last=False)
+                cache._evictions += 1
+        return cache

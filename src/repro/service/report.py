@@ -166,7 +166,9 @@ class ServiceReport:
     live here, and the percentile properties below derive from them.
     ``spans`` carries the run's finished tracer spans when
     ``ServiceConfig.obs`` enabled tracing (live objects — excluded
-    from JSON and equality).
+    from JSON and equality); ``pipelined`` likewise carries the live
+    :class:`~repro.throughput.pipeline.PipelinedReport` of a
+    :func:`~repro.service.sustained.run_sustained` replay.
     """
 
     trace: ServiceTrace
@@ -175,6 +177,8 @@ class ServiceReport:
     total_time_s: float = 0.0
     metrics: dict = field(default_factory=dict)
     spans: list = field(default_factory=list, repr=False, compare=False)
+    pipelined: object | None = field(default=None, repr=False,
+                                     compare=False)
 
     # convenience views ------------------------------------------------ #
     @property
@@ -235,6 +239,27 @@ class ServiceReport:
         """p50/p95/p99 of the seeded-plan makespan premium (ratio vs
         the cached winner; ``None`` without plan-cache hits)."""
         return self._hist_percentiles("service_makespan_premium")
+
+    # sustained-stream views (run_sustained) --------------------------- #
+    @property
+    def instance_latency_percentiles(self) -> dict | None:
+        """p50/p95/p99 of per-instance arrival→finish latency in a
+        sustained run (virtual time), or ``None``."""
+        return self._hist_percentiles("sustained_instance_latency")
+
+    @property
+    def instances_per_s(self) -> float | None:
+        """Achieved throughput of a sustained run (instances per
+        virtual time unit), or ``None``."""
+        return self.metrics.get("gauges", {}).get(
+            "sustained_instances_per_s")
+
+    @property
+    def saturation_rate(self) -> float | None:
+        """The plan's analytic sustainable rate — offered rates beyond
+        it saturate the pipeline; ``None`` outside sustained runs."""
+        return self.metrics.get("gauges", {}).get(
+            "sustained_saturation_rate")
 
     # serialization ---------------------------------------------------- #
     def to_dict(self) -> dict:

@@ -51,6 +51,7 @@ from .engine import (
 )
 from .memory import build_memory_trace, pick_block_order
 from .perturb import JitterSpec
+from .rng import stream_rng
 from .report import (
     JitterEnvelope,
     MemoryTrace,
@@ -81,6 +82,7 @@ __all__ = [
     "resume_engine",
     "run_engine",
     "simulate",
+    "stream_rng",
     "trace_memory",
 ]
 

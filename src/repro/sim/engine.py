@@ -3,20 +3,32 @@
 :func:`run_engine` executes a set of :class:`BlockSpec` compute units
 (quotient vertices pinned to processors) connected by :class:`EdgeSpec`
 transfers, under a pluggable communication model
-(:mod:`repro.sim.comm`).  The event loop interleaves two streams —
-block-finish events (a heap owned by the engine) and transfer
+(:mod:`repro.sim.comm`).  The event loop interleaves three streams —
+block-finish events (a heap owned by the engine), release events (for
+blocks whose earliest start is gated on an external instant, e.g. a
+workflow instance's arrival in pipelined replays) and transfer
 completions (owned by the comm model) — processing them in global time
 order with deterministic tie-breaking (block finishes first, then
-transfers by edge key).
+releases, then transfers by edge key).
 
 Semantics (the paper's execution model, §3.3):
 
 * a block occupies its processor for ``duration`` time units, starting
-  once **all** incoming transfers have completed and the processor is
-  free (blocks sharing a processor serialize in ready-time order —
-  a no-op for the paper's injective mappings);
+  once **all** incoming transfers have completed, its release time (if
+  any) has passed and the processor is free (blocks sharing a
+  processor serialize in ready-time order — a no-op for the paper's
+  injective mappings, but exactly the interference model pipelined
+  multi-instance replays need);
 * every outgoing quotient edge starts transferring the moment its
   source block finishes; the comm model decides when it lands.
+
+``run_engine(..., release={vid: t})`` floors each listed block's start
+at ``t``: :mod:`repro.throughput` lowers N instances of one workflow
+into disjoint vid ranges whose sources are released at the instance
+arrival times, so instance i+1's sources overlap instance i's sinks on
+the shared processors.  An empty/absent ``release`` map reproduces the
+original behavior bit-exactly (every floor is 0.0 and the release heap
+never populates — the identity anchor below is unaffected).
 
 Pause / resume
 --------------
@@ -130,6 +142,9 @@ class EngineCheckpoint:
     comm: object
     record_events: bool
     trace: EngineTrace
+    # (t, vid) heap of future release instants (empty unless the run
+    # was given explicit release times)
+    release_heap: list = field(default_factory=list)
 
 
 def transpose_edges(edges: list[EdgeSpec]) -> list[EdgeSpec]:
@@ -148,6 +163,7 @@ def _drive(cp: EngineCheckpoint, stop_time: float | None,
     proc_free_at = cp.proc_free_at
     proc_queue = cp.proc_queue
     finish_heap = cp.finish_heap
+    release_heap = cp.release_heap
     comm = cp.comm
     record_events = cp.record_events
     trace = cp.trace
@@ -172,16 +188,23 @@ def _drive(cp: EngineCheckpoint, stop_time: float | None,
             start_block(v, max(t, proc_free_at.get(p, 0.0)))
 
     for v in initial_ready:
-        on_ready(v, 0.0)
+        on_ready(v, arrival[v])
 
-    while finish_heap or comm.has_active():
+    while finish_heap or release_heap or comm.has_active():
         nxt = comm.next_completion()
-        # ties: block finishes strictly before transfer completions so
-        # a finishing block's own outgoing transfers join the comm
-        # state before same-instant completions are popped
-        take_block = finish_heap and (nxt is None
-                                      or finish_heap[0][0] <= nxt[0])
-        t_next = finish_heap[0][0] if take_block else nxt[0]
+        # ties: block finishes strictly before releases, which precede
+        # transfer completions — a finishing block's own outgoing
+        # transfers join the comm state before same-instant completions
+        # are popped, and a processor freed at t serves a block
+        # released at t before later-arriving work
+        kind = 0  # 0 = block finish, 1 = release, 2 = transfer
+        t_next = finish_heap[0][0] if finish_heap else None
+        if release_heap and (t_next is None
+                             or release_heap[0][0] < t_next):
+            t_next, kind = release_heap[0][0], 1
+        if nxt is not None and (t_next is None or nxt[0] < t_next):
+            t_next, kind = nxt[0], 2
+        take_block = kind == 0
         if stop_time is not None and t_next > stop_time:
             # pause *before* the first event past the stop time: the
             # executed prefix is exactly the uninterrupted run's events
@@ -210,6 +233,9 @@ def _drive(cp: EngineCheckpoint, stop_time: float | None,
             if q:
                 _, w = heapq.heappop(q)
                 start_block(w, t)
+        elif kind == 1:
+            t, v = heapq.heappop(release_heap)
+            on_ready(v, t)
         else:
             t, key = comm.complete()
             trace.xfer_finish[key] = t
@@ -221,7 +247,13 @@ def _drive(cp: EngineCheckpoint, stop_time: float | None,
                 arrival[dst] = t
             pending[dst] -= 1
             if pending[dst] == 0:
-                on_ready(dst, arrival[dst])
+                if arrival[dst] > t:
+                    # release floor still ahead of the last transfer:
+                    # defer readiness to the release instant so an
+                    # idle processor is not held for a future block
+                    heapq.heappush(release_heap, (arrival[dst], dst))
+                else:
+                    on_ready(dst, arrival[dst])
 
     if len(trace.finish) != len(by_vid):
         raise ValueError(
@@ -235,29 +267,37 @@ def _drive(cp: EngineCheckpoint, stop_time: float | None,
 
 def run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
                platform, *, record_events: bool = True,
-               stop_time: float | None = None) -> EngineTrace:
+               stop_time: float | None = None,
+               release: dict[int, float] | None = None) -> EngineTrace:
     """Replay ``blocks``/``edges`` under ``comm``; see module docstring.
 
     ``stop_time`` pauses the replay after the last event at or before
     that time; the returned trace then carries a resumable
     :class:`EngineCheckpoint` (``trace.checkpoint``) unless the replay
-    already completed.  Raises ``ValueError`` when the block graph is
-    cyclic (some block can never start).
+    already completed.  ``release`` floors listed blocks' start times
+    (instance arrivals in pipelined replays; absent blocks are released
+    at 0, and an all-zero map is bit-identical to no map).  Raises
+    ``ValueError`` when the block graph is cyclic (some block can never
+    start) or a release time is negative.
     """
     # one span per replay (wall-clock cost of the virtual-time engine)
     with trace_span("sim.run_engine", n_blocks=len(blocks),
                     n_edges=len(edges)):
         return _run_engine(blocks, edges, comm, platform,
                            record_events=record_events,
-                           stop_time=stop_time)
+                           stop_time=stop_time, release=release)
 
 
 def _run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
                 platform, *, record_events: bool = True,
-                stop_time: float | None = None) -> EngineTrace:
+                stop_time: float | None = None,
+                release: dict[int, float] | None = None) -> EngineTrace:
     by_vid = {b.vid: b for b in blocks}
     if len(by_vid) != len(blocks):
         raise ValueError("duplicate block vid")
+    rel = release or {}
+    if any(t < 0 for t in rel.values()):
+        raise ValueError("release times must be >= 0")
     out_edges: dict[int, list[EdgeSpec]] = {v: [] for v in by_vid}
     pending: dict[int, int] = {v: 0 for v in by_vid}
     seen_edges: set[tuple[int, int]] = set()
@@ -276,12 +316,24 @@ def _run_engine(blocks: list[BlockSpec], edges: list[EdgeSpec], comm,
     trace = EngineTrace(start={}, finish={}, xfer_start={}, xfer_finish={})
     cp = EngineCheckpoint(
         time=0.0, by_vid=by_vid, out_edges=out_edges, pending=pending,
-        arrival={v: 0.0 for v in by_vid},
+        # release times double as the arrival floor: a block is never
+        # ready before max(its release, its last incoming transfer)
+        arrival={v: rel.get(v, 0.0) for v in by_vid},
         # per-processor serialization state (trivial for injective maps)
         proc_busy={}, proc_free_at={}, proc_queue={}, finish_heap=[],
         comm=comm, record_events=record_events, trace=trace,
     )
-    ready = [v for v in sorted(by_vid) if pending[v] == 0]
+    # zero-pred blocks released in the future wait on the release heap
+    # (starting them eagerly would hold their processor busy from t=0);
+    # the rest are ready now, exactly as before
+    ready = []
+    for v in sorted(by_vid):
+        if pending[v] != 0:
+            continue
+        if cp.arrival[v] > 0.0:
+            heapq.heappush(cp.release_heap, (cp.arrival[v], v))
+        else:
+            ready.append(v)
     return _drive(cp, stop_time, ready)
 
 

@@ -22,10 +22,14 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .rng import stream_rng
+
 __all__ = ["JitterSpec"]
 
 # namespaces the SeedSequence so sim draws never collide with other
-# consumers of the same user-facing seed
+# consumers of the same user-facing seed (e.g. the arrival processes
+# in repro.throughput, which use their own tag through the same
+# stream_rng helper)
 _STREAM_TAG = 0x51D0
 
 
@@ -44,7 +48,7 @@ class JitterSpec:
 
     def factors(self, n: int, seed: int, replica: int) -> np.ndarray:
         """``n`` multiplicative duration factors for one replica."""
-        rng = np.random.default_rng([_STREAM_TAG, int(seed), int(replica)])
+        rng = stream_rng(_STREAM_TAG, seed, replica)
         a = self.amount
         if a == 0.0:
             return np.ones(n)

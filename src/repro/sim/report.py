@@ -110,7 +110,12 @@ class ProcUtilization:
 
 @dataclass(frozen=True)
 class MemoryViolation:
-    """An instant where a processor's occupancy exceeds its memory."""
+    """An instant where a processor's occupancy exceeds its memory.
+
+    ``instance`` pinpoints the workflow instance whose task pushed the
+    occupancy over in pipelined multi-instance replays
+    (:mod:`repro.throughput`); ``None`` for single-instance traces.
+    """
 
     time: float
     proc: int
@@ -118,13 +123,17 @@ class MemoryViolation:
     task: int
     occupancy: float
     capacity: float
+    instance: int | None = None
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "time": self.time, "proc": self.proc, "vertex": self.vertex,
             "task": self.task, "occupancy": self.occupancy,
             "capacity": self.capacity,
         }
+        if self.instance is not None:
+            d["instance"] = self.instance
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "MemoryViolation":

@@ -285,6 +285,45 @@ class TestServiceLoop:
         assert r1.jobs[0].planning_path == "cold"
         assert r2.jobs[0].planning_path == "seeded"
 
+    def test_cache_persists_fingerprint_keyed(self, tmp_path):
+        """save → load round-trips every entry under its fingerprint
+        key, and a loaded cache seeds a fresh service run."""
+        plat = default_cluster()
+        wf = _wf(n=80, seed=6)
+        cache = PlanCache()
+        cfg = ServiceConfig(scheduler=_cfg())
+        run_service([Submission(wf)], plat, config=cfg, cache=cache)
+        path = tmp_path / "plans.json"
+        cache.save(path)
+
+        loaded = PlanCache.load(path)
+        assert len(loaded) == len(cache) == 1
+        from repro.service import fingerprint_workflow
+
+        key = PlanCache.key(fingerprint_workflow(wf), plat)
+        orig, back = cache._store[key], loaded._store[key]
+        assert back.block_of_task == orig.block_of_task
+        assert back.k_prime == orig.k_prime
+        assert back.makespan == orig.makespan
+        # the restart path: a brand-new service seeded from disk
+        r = run_service([Submission(wf)], plat, config=cfg,
+                        cache=loaded)
+        assert r.jobs[0].planning_path == "seeded"
+
+    def test_cache_load_capacity_override_evicts_lru(self, tmp_path):
+        cache = PlanCache()
+        for i in range(3):
+            cache.put(f"k{i}", [0], 1, float(i))
+        path = tmp_path / "plans.json"
+        cache.save(path)
+        small = PlanCache.load(path, capacity=2)
+        assert len(small) == 2
+        assert "k0" not in small._store  # least recent evicted
+        assert {"k1", "k2"} <= set(small._store)
+        with pytest.raises(ValueError):
+            path.write_text(json.dumps({"version": 99, "entries": []}))
+            PlanCache.load(path)
+
     def test_malformed_payload_rejected_not_raised(self):
         rep = run_service(
             [Submission('{"broken": true}', name="bad"),

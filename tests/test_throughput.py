@@ -1,0 +1,517 @@
+"""Tests for repro.throughput — steady-state pipelined scheduling.
+
+The load-bearing anchor: **one instance arriving at rate→0 reproduces
+``schedule(wf, platform, simulate=True)`` bit-exactly** — same specs,
+same engine, same backward pass — asserted on all seven n=1000
+families.  Around it: the engine's release floor, seeded arrival
+processes, dominance-matched replication (disjoint groups, inherited
+feasibility), the N-instance sandwich property (single ≤ pipelined
+horizon ≤ N × single), the summed memory-occupancy tracker with
+per-instance violation pinpointing, the scheduler's ``throughput``
+pipeline (rate-max k' selection, structured latency-bound
+infeasibility), sustained service admission through the plan cache,
+and the per-instance trace tooling.
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep absent: seeded-random fallback
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import make_random_dag
+from repro.core import (
+    FAMILIES,
+    Platform,
+    Processor,
+    Workflow,
+    default_cluster,
+    generate_workflow,
+    makespan,
+    schedule,
+)
+from repro.core.dag import build_quotient
+from repro.sim import BlockSpec, ContentionFreeComm, EdgeSpec, run_engine
+from repro.service import PlanCache, run_sustained
+from repro.throughput import (
+    ArrivalSpec,
+    PipelinedReport,
+    ThroughputPlan,
+    build_pipelined_specs,
+    plan_throughput,
+    proc_busy_times,
+    replicate_plan,
+    saturation_sweep,
+    simulate_pipelined,
+)
+from repro.throughput.pipeline import _pipelined_memory_trace
+
+ANCHOR_N = 1000
+
+
+@pytest.fixture(scope="module")
+def plat() -> Platform:
+    return default_cluster()
+
+
+@pytest.fixture(scope="module")
+def family_wfs(plat):
+    """The seven n=1000 instances, generated once per module."""
+    return {f: generate_workflow(f, ANCHOR_N, seed=1, platform=plat)
+            for f in FAMILIES}
+
+
+def unit_procs(k: int, mem: float = 1e9) -> Platform:
+    return Platform([Processor(f"p{i}", 1.0, mem) for i in range(k)], 1.0)
+
+
+def chain_workflow(n: int = 3) -> Workflow:
+    wf = Workflow(n)
+    wf.work[:] = [2.0] * n
+    wf.mem[:] = [1.0] * n
+    for u in range(n - 1):
+        wf.add_edge(u, u + 1, 1.0)
+    return wf
+
+
+def singleton_mapping(wf: Workflow, platform: Platform):
+    """Every task its own block on its own processor (round-robin)."""
+    q = build_quotient(wf, list(range(wf.n)))
+    for i, vid in enumerate(sorted(q.members)):
+        q.proc[vid] = i % platform.k
+    return q
+
+
+# ---------------------------------------------------------------------- #
+# engine release floor
+# ---------------------------------------------------------------------- #
+class TestEngineRelease:
+    def test_release_floors_start(self):
+        blocks = [BlockSpec(0, 0, 1.0)]
+        tr = run_engine(blocks, [], ContentionFreeComm(), unit_procs(1),
+                        release={0: 5.0})
+        assert tr.start[0] == 5.0
+        assert tr.finish[0] == 6.0
+
+    def test_release_does_not_delay_late_readiness(self):
+        # pred finishes at 2.0 > release 1.0: release floor is inert
+        blocks = [BlockSpec(0, 0, 2.0), BlockSpec(1, 1, 1.0)]
+        edges = [EdgeSpec(0, 1, 0.0)]
+        tr = run_engine(blocks, edges, ContentionFreeComm(),
+                        unit_procs(2), release={1: 1.0})
+        assert tr.start[1] == 2.0
+
+    def test_empty_release_bit_identical(self):
+        wf = chain_workflow(4)
+        plat = unit_procs(4)
+        q = singleton_mapping(wf, plat)
+        from repro.sim import build_specs
+
+        blocks, edges = build_specs(q, plat)
+        a = run_engine(blocks, edges, ContentionFreeComm(), plat)
+        b = run_engine(blocks, edges, ContentionFreeComm(), plat,
+                       release={})
+        assert a.start == b.start and a.finish == b.finish
+        assert a.horizon == b.horizon
+
+
+# ---------------------------------------------------------------------- #
+# arrival processes
+# ---------------------------------------------------------------------- #
+class TestArrivals:
+    def test_deterministic_kind(self):
+        t = ArrivalSpec(0.5, "deterministic", start=3.0).times(4)
+        assert list(t) == [3.0, 5.0, 7.0, 9.0]
+
+    def test_poisson_seeded_and_monotone(self):
+        spec = ArrivalSpec(2.0, "poisson")
+        a = spec.times(64, seed=7)
+        b = spec.times(64, seed=7)
+        c = spec.times(64, seed=8)
+        assert list(a) == list(b)
+        assert list(a) != list(c)
+        assert all(x < y for x, y in zip(a, a[1:]))
+        assert a[0] >= 0.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ArrivalSpec(0.0)
+        with pytest.raises(ValueError):
+            ArrivalSpec(1.0, "weibull")
+        with pytest.raises(ValueError):
+            ArrivalSpec(1.0, start=-1.0)
+        with pytest.raises(ValueError):
+            ArrivalSpec(1.0).times(0)
+
+
+# ---------------------------------------------------------------------- #
+# steady-state pricing + replication
+# ---------------------------------------------------------------------- #
+class TestReplication:
+    def test_busy_times_price_compute_and_comm(self):
+        wf = chain_workflow(2)
+        plat = unit_procs(2)
+        q = singleton_mapping(wf, plat)
+        busy = proc_busy_times(q, plat, include_comm=True)
+        # 2.0 work / speed 1 + edge 1.0 / beta 1 on both endpoints
+        assert busy == {0: 3.0, 1: 3.0}
+        nc = proc_busy_times(q, plat, include_comm=False)
+        assert nc == {0: 2.0, 1: 2.0}
+
+    def test_groups_disjoint_and_dominant(self, plat, family_wfs):
+        rep = schedule(family_wfs["genome"], plat, kprime=[3],
+                       workers=1)
+        plan = replicate_plan(rep.best, plat)
+        assert plan.n_replicas >= 2
+        seen: set[int] = set()
+        for g in plan.groups:
+            procs = set(g.procs)
+            assert not (procs & seen)
+            seen |= procs
+        base = plan.groups[0]
+        for g in plan.groups[1:]:
+            for (b, _), (_, r) in zip(base.proc_map, g.proc_map):
+                assert plat.procs[r].speed >= plat.procs[b].speed
+                assert plat.procs[r].memory >= plat.procs[b].memory
+            assert g.latency <= base.latency * (1 + 1e-12)
+        assert plan.rate == plan.n_replicas / plan.period
+        assert plan.period == max(g.period for g in plan.groups)
+
+    def test_max_replicas_one_is_unreplicated(self, plat, family_wfs):
+        rep = schedule(family_wfs["genome"], plat, kprime=[3],
+                       workers=1)
+        plan = replicate_plan(rep.best, plat, max_replicas=1)
+        assert plan.n_replicas == 1
+        assert plan.rate == 1.0 / plan.period
+
+    def test_identity_group_latency_is_analytic_makespan(
+            self, plat, family_wfs):
+        rep = schedule(family_wfs["blast"], plat, kprime=[4], workers=1)
+        plan = replicate_plan(rep.best, plat)
+        assert plan.groups[0].latency == rep.makespan
+
+    def test_plan_round_trips(self, plat, family_wfs):
+        rep = schedule(family_wfs["genome"], plat, kprime=[3],
+                       workers=1)
+        plan = replicate_plan(rep.best, plat, latency_bound=1e12)
+        again = ThroughputPlan.from_dict(
+            json.loads(json.dumps(plan.to_dict())))
+        assert again == plan
+
+
+# ---------------------------------------------------------------------- #
+# the identity anchor (ISSUE acceptance criterion)
+# ---------------------------------------------------------------------- #
+class TestIdentityAnchor:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_rate_to_zero_bit_exact_n1000(self, family, family_wfs,
+                                          plat):
+        """One instance at arrival 0 IS ``schedule(..., simulate=True)``:
+        same specs, same engine — horizon and makespan bit-equal."""
+        wf = family_wfs[family]
+        rep = schedule(wf, plat, kprime=[6], workers=1, simulate=True)
+        assert rep.feasible, family
+        p = simulate_pipelined(rep.best, plat, arrivals=[0.0])
+        assert p.single_makespan == rep.sim.makespan, family
+        assert p.horizon == rep.sim.horizon, family
+        assert p.n_instances == 1
+        rec = p.instances[0]
+        assert rec.arrival == 0.0 and rec.finish == p.horizon
+        assert p.memory is not None and p.memory.feasible
+
+    def test_specs_bit_identical_for_instance_zero(self, plat,
+                                                   family_wfs):
+        from repro.sim import build_specs
+
+        rep = schedule(family_wfs["bwa"], plat, kprime=[4], workers=1)
+        q = rep.best.quotient
+        plan = replicate_plan(rep.best, plat, max_replicas=1)
+        blocks, edges, release, stride = build_pipelined_specs(
+            q, plat, plan, [0.0])
+        base_blocks, base_edges = build_specs(q, plat)
+        assert blocks == list(base_blocks)
+        assert sorted((e.src, e.dst, e.volume) for e in edges) == \
+            sorted((e.src, e.dst, e.volume) for e in base_edges)
+        assert set(release.values()) == {0.0}
+        assert stride == max(q.members) + 1
+
+
+# ---------------------------------------------------------------------- #
+# pipelined replay properties
+# ---------------------------------------------------------------------- #
+class TestPipelinedReplay:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n_tasks=st.integers(min_value=8, max_value=40),
+        seed=st.integers(min_value=0, max_value=10**6),
+        n_instances=st.integers(min_value=2, max_value=6),
+    )
+    def test_makespan_sandwich(self, n_tasks, seed, n_instances):
+        """Burst of N instances: single ≤ pipelined horizon ≤
+        N × single (pipelining can only help vs. back-to-back runs,
+        and interference can only hurt vs. one lone instance)."""
+        wf = make_random_dag(n_tasks, seed)
+        plat = unit_procs(4)
+        rep = schedule(wf, plat, workers=1)
+        if not rep.feasible:
+            return
+        p = simulate_pipelined(rep.best, plat,
+                               arrivals=[0.0] * n_instances,
+                               memory=False)
+        single = p.single_makespan
+        assert p.horizon >= single * (1 - 1e-9)
+        assert p.horizon <= n_instances * single * (1 + 1e-9)
+
+    def test_deterministic_replay(self, plat, family_wfs):
+        rep = schedule(family_wfs["genome"], plat, kprime=[3],
+                       workers=1)
+        a = simulate_pipelined(rep.best, plat, rate=0.0008,
+                               n_instances=8, seed=4, memory=False)
+        b = simulate_pipelined(rep.best, plat, rate=0.0008,
+                               n_instances=8, seed=4, memory=False)
+        assert a.block_start == b.block_start
+        assert [r.to_list() for r in a.instances] == \
+            [r.to_list() for r in b.instances]
+
+    def test_round_robin_dealing(self, plat, family_wfs):
+        rep = schedule(family_wfs["genome"], plat, kprime=[3],
+                       workers=1)
+        p = simulate_pipelined(rep.best, plat, rate=0.0008,
+                               n_instances=6, memory=False)
+        assert p.n_replicas >= 2
+        assert [r.replica for r in p.instances] == \
+            [i % p.n_replicas for i in range(6)]
+
+    def test_replicated_memory_feasible_at_overlap_peak(
+            self, plat, family_wfs):
+        """ISSUE acceptance: replicated plans never exceed processor
+        memory at the overlap peak — asserted via the occupancy
+        trace of a saturating burst."""
+        rep = schedule(family_wfs["genome"], plat, kprime=[3],
+                       workers=1)
+        plan = replicate_plan(rep.best, plat)
+        assert plan.n_replicas >= 2
+        p = simulate_pipelined(rep.best, plat, plan=plan,
+                               arrivals=[0.0] * (2 * plan.n_replicas))
+        assert p.memory.feasible
+        for j, pk in p.memory.peak.items():
+            assert pk <= plat.memory(j) * (1 + 1e-9)
+
+    def test_report_round_trips(self, plat, family_wfs):
+        rep = schedule(family_wfs["genome"], plat, kprime=[3],
+                       workers=1)
+        p = simulate_pipelined(rep.best, plat, rate=0.0008,
+                               n_instances=4, record_events=True)
+        again = PipelinedReport.from_dict(
+            json.loads(json.dumps(p.to_dict())))
+        assert again.to_dict() == p.to_dict()
+        assert again.latencies == p.latencies
+
+
+# ---------------------------------------------------------------------- #
+# summed occupancy tracker: violation pinpointing
+# ---------------------------------------------------------------------- #
+class TestSummedMemoryTracker:
+    def test_violation_names_the_instance(self):
+        """Two overlapping instances of one block on one processor:
+        the second instance's task start pushes occupancy over, and
+        the violation names instance 1 (not 0)."""
+        wf = Workflow(1)
+        wf.work[:] = [2.0]
+        wf.mem[:] = [3.0]
+        plat = unit_procs(1, mem=5.0)
+        q = build_quotient(wf, [0])
+        q.proc[0] = 0
+        from repro.core.baseline import MappingResult
+
+        res = MappingResult(algo="test", quotient=q, platform=plat,
+                            makespan=makespan(q, plat), runtime_s=0.0,
+                            k_used=1, extras={})
+        plan = replicate_plan(res, plat, max_replicas=1)
+        # overlapping windows (as if the engine had two exec units)
+        start = {0: 0.0, 1: 1.0}
+        finish = {0: 2.0, 1: 3.0}
+        mt = _pipelined_memory_trace(wf, q, plat, plan, start, finish,
+                                     stride=1, n_instances=2)
+        assert not mt.feasible
+        assert mt.peak[0] == 6.0
+        v = mt.violations[0]
+        assert v.instance == 1 and v.proc == 0 and v.capacity == 5.0
+        # serialization keeps the instance attribution
+        from repro.sim.report import MemoryViolation
+
+        again = MemoryViolation.from_dict(
+            json.loads(json.dumps(v.to_dict())))
+        assert again.instance == 1
+
+    def test_single_instance_within_capacity(self):
+        wf = Workflow(1)
+        wf.work[:] = [2.0]
+        wf.mem[:] = [3.0]
+        plat = unit_procs(1, mem=5.0)
+        q = build_quotient(wf, [0])
+        q.proc[0] = 0
+        from repro.core.baseline import MappingResult
+
+        res = MappingResult(algo="test", quotient=q, platform=plat,
+                            makespan=makespan(q, plat), runtime_s=0.0,
+                            k_used=1, extras={})
+        plan = replicate_plan(res, plat, max_replicas=1)
+        mt = _pipelined_memory_trace(wf, q, plat, plan,
+                                     {0: 0.0}, {0: 2.0},
+                                     stride=1, n_instances=1)
+        assert mt.feasible and mt.peak[0] == 3.0
+
+
+# ---------------------------------------------------------------------- #
+# the scheduler's throughput pipeline
+# ---------------------------------------------------------------------- #
+class TestThroughputPlanning:
+    def test_plan_attached_and_rate_positive(self, plat, family_wfs):
+        tr = plan_throughput(family_wfs["genome"], plat, kprime=[3],
+                             workers=1)
+        assert tr.feasible
+        assert tr.rate > 0 and tr.latency > 0
+        assert tr.best.extras["throughput"] == tr.plan
+        assert tr.plan.n_replicas >= 2
+
+    def test_rate_max_selection_across_sweep(self, plat, family_wfs):
+        """The winner maximizes the *replicated rate*, which need not
+        be the makespan winner."""
+        tr = plan_throughput(family_wfs["genome"], plat,
+                             kprime=[3, 9], workers=1)
+        assert tr.feasible
+        rates = {}
+        for pt in tr.report.sweep:
+            h = pt.metrics.get("histograms", {}).get("throughput_rate")
+            if pt.feasible and h:
+                rates[pt.k_prime] = float(h["sum"])
+        assert len(rates) == 2
+        assert tr.k_prime == max(rates, key=lambda k: rates[k])
+        assert tr.rate == pytest.approx(rates[tr.k_prime], rel=1e-12)
+
+    def test_latency_bound_is_structured_infeasibility(
+            self, plat, family_wfs):
+        tr = plan_throughput(family_wfs["genome"], plat, kprime=[3],
+                             workers=1, latency_bound=1e-9)
+        assert not tr.feasible
+        assert tr.report.infeasibility is not None
+        assert tr.report.infeasibility.stage == "throughput"
+
+    def test_latency_bound_caps_replication(self, plat, family_wfs):
+        wide = plan_throughput(family_wfs["genome"], plat, kprime=[3],
+                               workers=1)
+        bound = wide.plan.groups[0].latency  # only group 0 fits a
+        tr = plan_throughput(family_wfs["genome"], plat, kprime=[3],
+                             workers=1, latency_bound=bound)
+        assert tr.feasible
+        assert tr.latency <= bound
+
+    def test_saturation_sweep_finds_the_knee(self, plat, family_wfs):
+        tr = plan_throughput(family_wfs["genome"], plat, kprime=[3],
+                             workers=1)
+        rows = saturation_sweep(
+            tr.best, plat, plan=tr.plan,
+            rates=[0.3 * tr.rate, 3.0 * tr.rate], n_instances=16)
+        assert not rows[0]["saturated"]
+        assert rows[1]["saturated"]
+        assert rows[1]["p99"] >= rows[0]["p99"]
+        for row in rows:
+            assert row["p50"] <= row["p99"]
+
+
+# ---------------------------------------------------------------------- #
+# sustained service admission
+# ---------------------------------------------------------------------- #
+class TestRunSustained:
+    def test_cold_then_seeded_identical_timings(self, plat,
+                                                family_wfs):
+        wf = family_wfs["genome"]
+        cache = PlanCache(8)
+        a = run_sustained(wf, plat, rate=0.0008, n_instances=8,
+                          seed=2, cache=cache, kprime=[3])
+        b = run_sustained(wf, plat, rate=0.0008, n_instances=8,
+                          seed=2, cache=cache, kprime=[3])
+        assert a.jobs[0].planning_path == "cold"
+        assert b.jobs[0].planning_path == "seeded"
+        assert a.cache_stats["service_cache_misses"] == 1
+        assert b.cache_stats["service_cache_hits"] == 1
+        assert [j.finish_t for j in a.jobs] == \
+            [j.finish_t for j in b.jobs]
+
+    def test_report_carries_throughput_views(self, plat, family_wfs):
+        rep = run_sustained(family_wfs["genome"], plat, rate=0.0008,
+                            n_instances=8, kprime=[3])
+        assert len(rep.jobs) == 8
+        assert all(j.status == "completed" for j in rep.jobs)
+        assert rep.instances_per_s > 0
+        assert rep.saturation_rate > 0
+        pct = rep.instance_latency_percentiles
+        assert pct is not None and pct["p50"] <= pct["p99"]
+        assert rep.pipelined is not None
+        assert rep.pipelined.memory.feasible
+        # allocation is the replica group's processor names
+        assert rep.jobs[0].allocation
+        # the trace JSON round-trips (pipelined/spans excluded)
+        from repro.service import ServiceReport
+
+        again = ServiceReport.from_json(rep.to_json())
+        assert again.trace.to_dict() == rep.trace.to_dict()
+
+    def test_infeasible_is_structured(self, plat, family_wfs):
+        rep = run_sustained(family_wfs["genome"], plat, rate=0.0008,
+                            n_instances=4, kprime=[3],
+                            latency_bound=1e-9)
+        assert len(rep.jobs) == 1
+        assert rep.jobs[0].status == "infeasible"
+        assert rep.jobs[0].infeasibility["stage"] == "throughput"
+        assert rep.pipelined is None
+
+
+# ---------------------------------------------------------------------- #
+# per-instance trace tooling
+# ---------------------------------------------------------------------- #
+class TestInstanceTraceTooling:
+    def test_stride_decoding_and_per_instance_tracks(
+            self, tmp_path, plat, family_wfs):
+        from repro.obs.export import sim_proc_events, write_chrome_trace
+
+        rep = schedule(family_wfs["genome"], plat, kprime=[3],
+                       workers=1)
+        p = simulate_pipelined(rep.best, plat, rate=0.0008,
+                               n_instances=3, record_events=True,
+                               memory=False)
+        ev = sim_proc_events(p, stride=p.stride)
+        insts = {e["args"]["instance"] for e in ev
+                 if e["cat"] == "task"}
+        assert insts == {0, 1, 2}
+        assert all(e["args"]["vertex"] < p.stride for e in ev
+                   if e["cat"] == "task")
+        path = tmp_path / "pipe.json"
+        write_chrome_trace(path, ev)
+
+        spec = importlib.util.spec_from_file_location(
+            "trace_view",
+            Path(__file__).resolve().parent.parent
+            / "tools" / "trace_view.py")
+        tv = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(tv)
+        spans = tv.load_spans(path)
+        tv.split_per_instance(spans)
+        tids = {s["tid"] for s in spans}
+        assert any("#i1" in t for t in tids)
+        out = tv.format_table(spans, 5, False)
+        assert "#i" in out
+
+    def test_histogram_mean(self):
+        from repro.obs.metrics import Histogram
+
+        h = Histogram()
+        assert h.mean is None
+        h.observe(2.0)
+        h.observe(4.0)
+        assert h.mean == 3.0

@@ -16,6 +16,12 @@ Usage::
 ``--self`` ranks by *self time* (duration minus the time covered by
 child spans on the same track) instead of total duration — the number
 that answers "where did the time actually go" for nested spans.
+
+``--per-instance`` splits tracks by workflow instance for pipelined
+multi-instance traces (``repro.obs.export.sim_proc_events`` with
+``stride=``): a slice carrying ``instance`` in its args shows its
+track as ``proc:3#i7``, so one processor's interleaved instances read
+apart.
 """
 from __future__ import annotations
 
@@ -102,6 +108,15 @@ def add_self_time(spans: list[dict]) -> None:
             s["self_s"] = max(0.0, s["dur"] - child_time)
 
 
+def split_per_instance(spans: list[dict]) -> None:
+    """Suffix each span's track with ``#i{instance}`` when its attrs
+    carry one (pipelined multi-instance traces)."""
+    for s in spans:
+        inst = (s.get("attrs") or {}).get("instance")
+        if inst is not None:
+            s["tid"] = f"{s.get('tid', '')}#i{inst}"
+
+
 def format_table(spans: list[dict], n: int, by_self: bool) -> str:
     key = "self_s" if by_self else "dur"
     top = sorted(spans, key=lambda s: s.get(key, 0.0), reverse=True)[:n]
@@ -132,11 +147,17 @@ def main(argv=None) -> int:
     ap.add_argument("-n", type=int, default=15, help="rows to show")
     ap.add_argument("--self", dest="by_self", action="store_true",
                     help="rank by self time (minus child spans)")
+    ap.add_argument("--per-instance", dest="per_instance",
+                    action="store_true",
+                    help="split tracks per workflow instance "
+                         "(pipelined traces)")
     args = ap.parse_args(argv)
     spans = load_spans(args.trace)
     if not spans:
         print(f"no spans in {args.trace}", file=sys.stderr)
         return 1
+    if args.per_instance:
+        split_per_instance(spans)
     add_self_time(spans)
     print(format_table(spans, args.n, args.by_self))
     return 0
