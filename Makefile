@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: verify test fast bench bench-large bench-sweep bench-sim \
 	bench-scenario bench-service bench-step1 bench-step2 bench-obs \
-	bench-throughput docs-check
+	bench-throughput bench-objectives fuzz docs-check
 
 # tier-1 verification (ROADMAP.md) + executable-docs check
 verify:
@@ -73,3 +73,14 @@ bench-obs:
 # with the saturation point -> BENCH_runtime.json ("throughput")
 bench-throughput:
 	python -m benchmarks.bench_throughput
+
+# objective trade-offs: makespan vs reliability-weighted vs
+# energy-under-floor on 3 families + 50-case fuzz pass rate
+# -> BENCH_runtime.json ("objectives")
+bench-objectives:
+	python -m benchmarks.bench_objectives
+
+# large seeded fuzz corpus (150 cases x 3 policies + service), prints
+# the per-policy violation breakdown; seed via REPRO_FUZZ_SEED
+fuzz:
+	python -c "from repro.scenario.fuzz import main; raise SystemExit(main())"

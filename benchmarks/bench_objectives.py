@@ -1,0 +1,173 @@
+"""Objective trade-offs + fuzz-corpus pass rate.
+
+Two sub-benches, both landing under the ``"objectives"`` tier of
+``BENCH_runtime.json`` (``make bench-objectives``):
+
+* **tradeoff** — three n=1000 families on the default cluster with a
+  *calibrated* failure/power model (uniformly scaled so the baseline
+  makespan plan lands at ~0.95 success probability — the regime where
+  reliability-weighting can actually move the winner).  Per family,
+  three plans over the same k' sweep: the plain makespan winner
+  (priced post-hoc), the reliability-weighted winner
+  (:func:`plan_reliability`), and the energy minimizer under a
+  reliability floor just below the baseline's own success probability
+  (:func:`plan_energy` with a 3-level DVFS ladder).  Headline numbers:
+  the weighted-makespan gain of the reliability winner and the energy
+  saved by DVFS at the floor.
+
+* **fuzz** — pass rate of a 50-case :func:`fuzz_scenarios` corpus
+  (checks, violations, per-policy counts) so the harness's health is a
+  tracked number, not just a test verdict.
+
+CSV rows follow the ``name,value,derived`` contract of
+``benchmarks.run``; the JSON tier is rewritten after each sub-bench so
+a partial run still leaves usable data.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import default_cluster, generate_workflow, schedule
+from repro.core.platform import ProcPower
+from repro.objectives import (
+    energy_plan,
+    plan_energy,
+    plan_reliability,
+    schedule_energy,
+    schedule_reliability,
+)
+from repro.scenario import fuzz_scenarios
+
+from .bench_runtime import _load_results, _write_results
+from .common import emit
+
+KPRIME = [4, 8, 16, 33]
+FAMILIES = ["genome", "montage", "blast"]
+TARGET_HAZARD = 0.1  # baseline success_prob ~ exp(-0.1) ~ 0.905
+SPEED_LEVELS = (0.6, 0.8, 1.0)
+
+
+def _modeled_cluster(wf, plat):
+    """Attach speed-cubed failure rates (faster processors run hotter
+    and fail more — the classic DVFS/reliability coupling) scaled so
+    the *baseline* makespan plan sits at ``exp(-TARGET_HAZARD)``
+    success, plus a mildly heterogeneous power model."""
+    base = schedule(wf, plat, kprime=KPRIME, workers=1)
+    probe = plat.with_failure_rates(
+        {j: plat.procs[j].speed ** 3 * 1e-9 for j in range(plat.k)})
+    h1 = schedule_reliability(base.best, probe).hazard
+    s = TARGET_HAZARD / h1 * 1e-9 if h1 > 0 else 0.0
+    modeled = plat.with_failure_rates(
+        {j: plat.procs[j].speed ** 3 * s for j in range(plat.k)})
+    modeled = modeled.with_power(
+        {j: ProcPower(0.5, 1.0 + 0.1 * j, 2.0) for j in range(plat.k)})
+    return base, modeled
+
+
+def tradeoff(n: int = 1000, seed: int = 1) -> dict:
+    """Makespan vs reliability-weighted vs energy-under-floor."""
+    plat = default_cluster()
+    out: dict[str, dict] = {}
+    for fam in FAMILIES:
+        wf = generate_workflow(fam, n, seed=seed, platform=plat)
+        base, modeled = _modeled_cluster(wf, plat)
+        base_rel = schedule_reliability(base.best, modeled)
+        base_en = schedule_energy(base.best, modeled)
+
+        rr = plan_reliability(wf, modeled, kprime=KPRIME, workers=1)
+        gain = (base_rel.weighted_makespan / rr.reliability.weighted_makespan
+                if rr.feasible else float("nan"))
+
+        floor = 0.995 * base_rel.success_prob
+        er = plan_energy(wf, modeled, reliability_floor=floor,
+                         speed_levels=SPEED_LEVELS,
+                         kprime=KPRIME, workers=1)
+        # energy saved vs running the *same* winning mapping all-nominal
+        nominal = (schedule_energy(er.best, modeled)
+                   if er.feasible else None)
+        saved = (1.0 - er.energy.total / nominal.total
+                 if nominal is not None else float("nan"))
+
+        emit(f"objectives.{fam}.base.makespan", base.makespan)
+        emit(f"objectives.{fam}.base.success_prob",
+             base_rel.success_prob)
+        emit(f"objectives.{fam}.rel.weighted_gain", gain,
+             "baseline weighted-ms over reliability winner's")
+        emit(f"objectives.{fam}.rel.success_prob",
+             rr.reliability.success_prob if rr.feasible else None)
+        emit(f"objectives.{fam}.energy.saved_frac", saved,
+             f"DVFS vs nominal at floor {floor:.4f}")
+        emit(f"objectives.{fam}.energy.total",
+             er.energy.total if er.feasible else None)
+        out[fam] = {
+            "base_makespan": base.makespan,
+            "base_success_prob": base_rel.success_prob,
+            "base_energy": base_en.total,
+            "rel_k_prime": rr.k_prime,
+            "rel_makespan": rr.best.makespan if rr.feasible else None,
+            "rel_success_prob": (rr.reliability.success_prob
+                                 if rr.feasible else None),
+            "rel_weighted_gain": gain,
+            "energy_floor": floor,
+            "energy_k_prime": er.k_prime,
+            "energy_total": er.energy.total if er.feasible else None,
+            "energy_saved_frac": saved,
+            "energy_reliability": (er.energy.reliability
+                                   if er.feasible else None),
+        }
+    return out
+
+
+def fuzz(n: int = 50, seed: int = 0) -> dict:
+    """Corpus pass rate across every policy + the service loop."""
+    rep = fuzz_scenarios(seed=seed, n=n)
+    emit("objectives.fuzz.cases", rep.n_cases)
+    emit("objectives.fuzz.checks", rep.checks)
+    emit("objectives.fuzz.violations", len(rep.violations),
+         "target: 0")
+    return {
+        "seed": rep.seed,
+        "cases": rep.n_cases,
+        "checks": rep.checks,
+        "violations": len(rep.violations),
+        "per_policy": dict(rep.per_policy),
+        "passed": rep.passed,
+    }
+
+
+def run(write_json: bool = True) -> dict:
+    results = _load_results()
+    tier = results.setdefault("objectives", {})
+    tier["tradeoff"] = tradeoff()
+    if write_json:
+        _write_results(results)
+    tier["fuzz"] = fuzz()
+    if write_json:
+        _write_results(results)
+    return tier
+
+
+if __name__ == "__main__":
+    out = run()
+    gains = [(f, r["rel_weighted_gain"]) for f, r in
+             out["tradeoff"].items()]
+    saves = [(f, r["energy_saved_frac"]) for f, r in
+             out["tradeoff"].items()]
+    bf, bg = max(gains, key=lambda x: x[1])
+    sf, sv = max(saves, key=lambda x: x[1])
+    fz = out["fuzz"]
+    print(f"# reliability: best weighted gain {bg:.3f}x on {bf}; "
+          f"energy: best DVFS saving {sv:.1%} on {sf}",
+          file=sys.stderr)
+    print(f"# fuzz: {fz['checks']} checks, {fz['violations']} "
+          f"violation(s) over {fz['cases']} cases "
+          f"({'PASS' if fz['passed'] else 'FAIL'})", file=sys.stderr)
+
+    # the unconstrained-floor sanity anchor: with no floor the plan is
+    # all-lowest-level, so it can never cost more than nominal
+    plat = default_cluster()
+    wf = generate_workflow("genome", 300, seed=1, platform=plat)
+    base, modeled = _modeled_cluster(wf, plat)
+    free = energy_plan(base.best, modeled, speed_levels=SPEED_LEVELS)
+    nominal = schedule_energy(base.best, modeled)
+    assert free.total <= nominal.total + 1e-9

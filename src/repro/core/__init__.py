@@ -155,6 +155,7 @@ by ``repro.scenario`` directly.
 from .dag import QuotientGraph, Workflow, build_quotient
 from .platform import (
     Platform,
+    ProcPower,
     Processor,
     default_cluster,
     large_cluster,
@@ -207,7 +208,7 @@ from .workflows import (
 
 __all__ = [
     "Workflow", "QuotientGraph", "build_quotient",
-    "Platform", "Processor",
+    "Platform", "ProcPower", "Processor",
     "default_cluster", "small_cluster", "large_cluster",
     "more_het_cluster", "less_het_cluster", "no_het_cluster", "tpu_fleet",
     "bottom_weights", "bottom_weights_flat", "critical_path", "makespan",

@@ -19,6 +19,7 @@ from dataclasses import dataclass, field, replace
 
 __all__ = [
     "Processor",
+    "ProcPower",
     "Platform",
     "default_cluster",
     "small_cluster",
@@ -37,6 +38,42 @@ class Processor:
     memory: float  # normalized units (paper: GB); TPU preset: GiB HBM
 
 
+@dataclass(frozen=True)
+class ProcPower:
+    """Static + dynamic power model of one processor.
+
+    Busy power at execution speed ``s`` is
+    ``static + dynamic * s**alpha`` — the classic DVFS speed-scaling
+    form (dynamic power ∝ s^α, α ≈ 2–3): ``static`` is drawn for the
+    whole schedule horizon whether the processor computes or idles,
+    the dynamic term only while it computes.  Energy accounting over a
+    schedule (:mod:`repro.objectives`, ``SimReport.energy``) integrates
+    exactly these two terms: per-processor static × horizon plus
+    per-block dynamic × compute time.
+    """
+
+    static: float
+    dynamic: float
+    alpha: float = 2.0
+
+    def __post_init__(self) -> None:
+        if not (self.static >= 0 and self.dynamic >= 0):
+            raise ValueError(
+                f"power coefficients must be >= 0, got static="
+                f"{self.static!r} dynamic={self.dynamic!r}")
+        if not self.alpha >= 1:
+            raise ValueError(
+                f"speed-scaling exponent alpha must be >= 1, got "
+                f"{self.alpha!r}")
+
+    def busy_watts(self, speed: float) -> float:
+        """Power drawn while computing at ``speed``."""
+        return self.static + self.dynamic * speed ** self.alpha
+
+    def to_list(self) -> list:
+        return [self.static, self.dynamic, self.alpha]
+
+
 @dataclass
 class Platform:
     """Computing system S with k processors and uniform bandwidth β.
@@ -47,6 +84,16 @@ class Platform:
     transforms: :meth:`with_bandwidth` rescales only the uniform base
     and :meth:`without` reindexes surviving links, so failure scenarios
     preserve the link configuration.
+
+    ``failure_rates`` maps a processor index to its exponential failure
+    rate λ (failures per time unit; absent ⇒ the processor never
+    fails), and ``power`` maps a processor index to its
+    :class:`ProcPower` model (absent ⇒ unmetered).  Both are sparse and
+    *optional* — a platform without them schedules exactly as before —
+    and both compose with the elastic transforms the same way link
+    overrides do: :meth:`with_speed` / :meth:`with_processors` /
+    :meth:`with_bandwidth` / :meth:`with_link_bandwidth` carry them
+    unchanged and :meth:`without` reindexes the surviving entries.
     """
 
     procs: list[Processor]
@@ -54,6 +101,8 @@ class Platform:
     name: str = "cluster"
     link_bandwidth: dict[tuple[int, int], float] = field(
         default_factory=dict)
+    failure_rates: dict[int, float] = field(default_factory=dict)
+    power: dict[int, ProcPower] = field(default_factory=dict)
 
     @property
     def k(self) -> int:
@@ -89,10 +138,28 @@ class Platform:
             return math.inf
         return self.link_bandwidth.get((i, j), self.bandwidth)
 
+    def failure_rate(self, j: int) -> float:
+        """Exponential failure rate λ of processor ``j`` (0.0 when no
+        failure model is set for it — it never fails)."""
+        return self.failure_rates.get(j, 0.0)
+
+    def proc_power(self, j: int) -> ProcPower | None:
+        """Power model of processor ``j`` (``None`` when unmetered)."""
+        return self.power.get(j)
+
+    @property
+    def has_failure_model(self) -> bool:
+        return bool(self.failure_rates)
+
+    @property
+    def has_power_model(self) -> bool:
+        return bool(self.power)
+
     def with_bandwidth(self, beta: float) -> "Platform":
         """Uniform-β rescale; per-link overrides are kept as-is."""
         return Platform(list(self.procs), beta, f"{self.name}@beta={beta}",
-                        dict(self.link_bandwidth))
+                        dict(self.link_bandwidth),
+                        dict(self.failure_rates), dict(self.power))
 
     def with_speed(self, j: int, speed: float) -> "Platform":
         """Platform with processor ``j``'s speed replaced by ``speed``
@@ -115,16 +182,21 @@ class Platform:
         procs = list(self.procs)
         procs[j] = replace(procs[j], speed=float(speed))
         return Platform(procs, self.bandwidth, self.name,
-                        dict(self.link_bandwidth))
+                        dict(self.link_bandwidth),
+                        dict(self.failure_rates), dict(self.power))
 
     def with_processors(self, procs: list["Processor"]) -> "Platform":
         """Platform with ``procs`` appended (elastic scale-up).
 
         New processors take the next indices, so existing per-link
-        overrides (and any external index references) stay valid.
+        overrides, failure rates and power models (and any external
+        index references) stay valid.  Arrivals carry no failure/power
+        entry; attach one with :meth:`with_failure_rates` /
+        :meth:`with_power`.
         """
         return Platform(list(self.procs) + list(procs), self.bandwidth,
-                        self.name, dict(self.link_bandwidth))
+                        self.name, dict(self.link_bandwidth),
+                        dict(self.failure_rates), dict(self.power))
 
     def with_link_bandwidth(self, i: int, j: int, beta: float, *,
                             symmetric: bool = True) -> "Platform":
@@ -145,14 +217,58 @@ class Platform:
         links[(i, j)] = beta
         if symmetric:
             links[(j, i)] = beta
-        return Platform(list(self.procs), self.bandwidth, self.name, links)
+        return Platform(list(self.procs), self.bandwidth, self.name, links,
+                        dict(self.failure_rates), dict(self.power))
+
+    def with_failure_rates(
+            self, rates: dict[int, float], *,
+            merge: bool = True) -> "Platform":
+        """Platform with exponential failure rates attached.
+
+        ``rates`` maps processor index → λ (> 0, finite).  ``merge``
+        folds into any existing rates (new entries win); ``merge=False``
+        replaces the whole model (``{}`` removes it).
+        """
+        for j, lam in rates.items():
+            if not 0 <= j < self.k:
+                raise ValueError(
+                    f"failure rate for processor {j} out of range for "
+                    f"k={self.k}")
+            if not (lam > 0 and math.isfinite(lam)):
+                raise ValueError(
+                    f"failure rate must be positive and finite, got "
+                    f"{lam!r} for processor {j}")
+        new = ({**self.failure_rates, **rates} if merge
+               else dict(rates))
+        return Platform(list(self.procs), self.bandwidth, self.name,
+                        dict(self.link_bandwidth), new, dict(self.power))
+
+    def with_power(self, power: dict[int, ProcPower], *,
+                   merge: bool = True) -> "Platform":
+        """Platform with per-processor :class:`ProcPower` models
+        attached (same merge/replace semantics as
+        :meth:`with_failure_rates`)."""
+        for j, pw in power.items():
+            if not 0 <= j < self.k:
+                raise ValueError(
+                    f"power model for processor {j} out of range for "
+                    f"k={self.k}")
+            if not isinstance(pw, ProcPower):
+                raise TypeError(
+                    f"power model for processor {j} must be a ProcPower, "
+                    f"got {pw!r}")
+        new = {**self.power, **power} if merge else dict(power)
+        return Platform(list(self.procs), self.bandwidth, self.name,
+                        dict(self.link_bandwidth),
+                        dict(self.failure_rates), new)
 
     def without(self, failed: set[int]) -> "Platform":
         """Platform after losing processors ``failed`` (elastic rescale).
 
-        Surviving per-link overrides are reindexed to the compacted
-        processor numbering, so a degraded platform keeps the same
-        link configuration between the processors that remain.
+        Surviving per-link overrides, failure rates and power models
+        are reindexed to the compacted processor numbering, so a
+        degraded platform keeps the same configuration between the
+        processors that remain.
         """
         keep = [j for j in range(self.k) if j not in failed]
         new_index = {old: i for i, old in enumerate(keep)}
@@ -161,8 +277,13 @@ class Platform:
             for (a, b), bw in self.link_bandwidth.items()
             if a in new_index and b in new_index
         }
+        rates = {new_index[j]: lam
+                 for j, lam in self.failure_rates.items()
+                 if j in new_index}
+        power = {new_index[j]: pw for j, pw in self.power.items()
+                 if j in new_index}
         return Platform([self.procs[j] for j in keep], self.bandwidth,
-                        f"{self.name}-degraded", links)
+                        f"{self.name}-degraded", links, rates, power)
 
 
 # ---------------------------------------------------------------------- #

@@ -48,7 +48,7 @@ from typing import Callable, Protocol, Sequence, runtime_checkable
 
 from repro.obs import JsonlSink, ObsConfig, span_events, write_chrome_trace
 from repro.obs import tracer as _trc
-from repro.obs.metrics import METRICS, Histogram
+from repro.obs.metrics import METRICS, RATIO_BOUNDARIES, Histogram
 from repro.obs.tracer import trace_span
 
 _log = logging.getLogger(__name__)
@@ -286,6 +286,21 @@ class ScheduleReport:
         the run included the ``simulate`` stage), else ``None``."""
         return self.best.extras.get("sim") if self.best else None
 
+    @property
+    def reliability(self):
+        """The best mapping's
+        :class:`repro.objectives.ReliabilityReport` (present when the
+        run included the ``reliability`` stage and the platform carries
+        a failure model), else ``None``."""
+        return self.best.extras.get("reliability") if self.best else None
+
+    @property
+    def energy(self):
+        """The best mapping's :class:`repro.objectives.EnergyReport`
+        (present when the run included the ``energy`` stage and the
+        platform carries a power model), else ``None``."""
+        return self.best.extras.get("energy") if self.best else None
+
     def to_dict(self) -> dict:
         return {
             "algorithm": self.algorithm,
@@ -405,6 +420,7 @@ class StageContext:
     failure: StageFailure | None = None
     sim_options: dict | None = None         # simulate-stage kwargs
     throughput_options: dict | None = None  # throughput-stage kwargs
+    objective_options: dict | None = None   # reliability/energy kwargs
     resume: ResumeState | None = None       # warm_start-stage input
     pinned: set[int] = field(default_factory=set)  # vids frozen in place
     step1_multilevel: bool = False          # multilevel Step-1 opt-in
@@ -751,6 +767,94 @@ class ThroughputStage:
         METRICS.observe("throughput_period", plan.period)
 
 
+class ReliabilityStage:
+    """Reliability-weighted makespan pricing (:mod:`repro.objectives`):
+    success probability of the mapped schedule from per-block exposure
+    time × its processor's exponential failure rate
+    (``extras["reliability"]``, a
+    :class:`~repro.objectives.ReliabilityReport`).
+
+    **Bit-inert** without a failure model: when
+    ``platform.failure_rates`` is empty the stage returns without
+    touching the result, so the makespan pipeline's output is
+    unchanged.  Each attempt's weighted makespan / success probability
+    land as single-observation histograms in the sweep point's
+    ``metrics`` block (same contract as the throughput stage), so
+    :func:`repro.objectives.plan_reliability` can pick the
+    weighted-makespan winner per k'.
+    """
+
+    name = "reliability"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        _materialize_result(ctx, ctx.k_prime)
+        if ctx.result is None:
+            return
+        if not ctx.platform.failure_rates:
+            return  # no model -> bit-inert
+        from repro import objectives as _obj  # deferred, like simulate
+
+        rel = _obj.schedule_reliability(ctx.result, ctx.platform)
+        ctx.result.extras["reliability"] = rel
+        METRICS.counter("objective_reliability_evals")
+        METRICS.observe("objective_rel_weighted_ms", rel.weighted_makespan)
+        METRICS.observe("objective_success_prob", rel.success_prob,
+                        boundaries=RATIO_BOUNDARIES)
+
+
+class EnergyStage:
+    """Energy minimization under a reliability floor
+    (:mod:`repro.objectives`): per-block DVFS speed choice minimizing
+    static+dynamic energy while keeping the schedule's success
+    probability above ``objective_options["reliability_floor"]``
+    (``extras["energy"]``, an :class:`~repro.objectives.EnergyReport`).
+
+    Options come from ``SchedulerConfig.objective_options``
+    (``reliability_floor``, ``speed_levels``).  A floor the all-nominal
+    plan cannot reach is a structured :class:`StageFailure` with stage
+    name ``"objective"`` — the k' attempt is infeasible under the
+    reliability constraint even though a mapping exists.  **Bit-inert**
+    without a power model (``platform.power`` empty).  The attempt's
+    total energy lands as a single-observation histogram so
+    :func:`repro.objectives.plan_energy` can pick the energy-minimizing
+    attempt per k'.
+    """
+
+    name = "energy"
+    toggle = None
+
+    def run(self, ctx: StageContext) -> None:
+        _materialize_result(ctx, ctx.k_prime)
+        if ctx.result is None:
+            return
+        if not ctx.platform.power:
+            return  # no model -> bit-inert
+        from repro import objectives as _obj  # deferred, like simulate
+
+        opts = dict(ctx.objective_options or {})
+        floor = opts.get("reliability_floor")
+        levels = opts.get("speed_levels", (1.0,))
+        plan = _obj.energy_plan(ctx.result, ctx.platform,
+                                reliability_floor=floor,
+                                speed_levels=levels)
+        if plan is None:
+            METRICS.counter("objective_energy_infeasible")
+            ctx.failure = StageFailure(
+                "objective",
+                f"reliability floor {floor:.6g} unreachable at "
+                f"k'={ctx.k_prime}: even all-nominal speeds miss it",
+                None,
+            )
+            ctx.result = None
+            return
+        ctx.result.extras["energy"] = plan
+        METRICS.counter("objective_energy_evals")
+        METRICS.observe("objective_energy_total", plan.total)
+        METRICS.observe("objective_success_prob", plan.reliability,
+                        boundaries=RATIO_BOUNDARIES)
+
+
 _STAGES: dict[str, Stage] = {}
 
 #: algorithm name -> pipeline (tuple of registered stage names)
@@ -787,7 +891,7 @@ def register_pipeline(algorithm: str, stage_names: Sequence[str]) -> None:
 for _stage in (PartitionStage(), AssignStage(), MergeStage(),
                SwapStage(), IdleMoveStage(), PackStage(),
                SimulateStage(), WarmStartStage(), SeedPartitionStage(),
-               ThroughputStage()):
+               ThroughputStage(), ReliabilityStage(), EnergyStage()):
     register_stage(_stage)
 register_pipeline("dag_het_part",
                   ("partition", "assign", "merge", "swap", "idle_moves",
@@ -811,6 +915,15 @@ register_pipeline("throughput",
 register_pipeline("throughput_seeded",
                   ("seed_partition", "assign", "merge", "swap",
                    "idle_moves", "simulate", "throughput"))
+# Richer objectives (repro.objectives): the four-step heuristic plus
+# reliability-weighted makespan pricing / DVFS energy minimization under
+# a reliability floor per k' (both bit-inert on model-free platforms).
+register_pipeline("reliability",
+                  ("partition", "assign", "merge", "swap", "idle_moves",
+                   "simulate", "reliability"))
+register_pipeline("energy",
+                  ("partition", "assign", "merge", "swap", "idle_moves",
+                   "simulate", "energy"))
 
 
 # ---------------------------------------------------------------------- #
@@ -862,6 +975,10 @@ class SchedulerConfig:
     #: pipeline includes the stage (``throughput`` /
     #: ``throughput_seeded``) read it
     throughput_options: dict | None = None
+    #: keyword dict for the objective stages (``reliability_floor``,
+    #: ``speed_levels``); only algorithms whose pipeline includes the
+    #: ``reliability`` / ``energy`` stage read it
+    objective_options: dict | None = None
     obs: ObsConfig | None = None
     #: opt into multilevel Step-1 partitioning (coarsen → partition →
     #: uncoarsen).  Changes cuts — hence makespans — by design, so it is
@@ -891,6 +1008,7 @@ class _RunSpec:
     exact_limit: int
     sim_options: dict | None = None
     throughput_options: dict | None = None
+    objective_options: dict | None = None
     step2_impl: str = "auto"
     step1_impl: str = "auto"
     step1_multilevel: bool = False
@@ -969,6 +1087,7 @@ def _execute_pipeline(
                        exact_limit=spec.exact_limit, memo=memo,
                        sim_options=spec.sim_options,
                        throughput_options=spec.throughput_options,
+                       objective_options=spec.objective_options,
                        resume=resume,
                        step1_multilevel=spec.step1_multilevel,
                        seed_blocks=seed_blocks)
@@ -1187,6 +1306,7 @@ class Scheduler:
         tracer = _trc.current_tracer()
         spec = _RunSpec(self.stage_names(), cfg.exact_limit,
                         cfg.sim_options, cfg.throughput_options,
+                        cfg.objective_options,
                         step2_impl(), step1_impl(),
                         cfg.step1_multilevel,
                         obs_enabled=tracer is not None,
@@ -1326,7 +1446,7 @@ class Scheduler:
         from .partitioner import step1_impl
 
         spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options,
-                        cfg.throughput_options,
+                        cfg.throughput_options, cfg.objective_options,
                         step2_impl(), step1_impl(), cfg.step1_multilevel)
         res, point = _execute_pipeline(state.wf, state.platform, spec,
                                        None, {}, resume=state)
@@ -1400,7 +1520,7 @@ class Scheduler:
         from .partitioner import step1_impl
 
         spec = _RunSpec(names, cfg.exact_limit, cfg.sim_options,
-                        cfg.throughput_options,
+                        cfg.throughput_options, cfg.objective_options,
                         step2_impl(), step1_impl(), cfg.step1_multilevel)
         res, point = _execute_pipeline(wf, platform, spec,
                                        k_prime, {}, seed_blocks=seed)

@@ -30,6 +30,17 @@ replan-latency and makespan gaps between them.
 
 An empty event timeline reproduces ``Scheduler(config).schedule(wf,
 platform)`` bit-exactly — the subsystem's identity anchor.
+
+:mod:`repro.scenario.fuzz` turns these invariants into a harness:
+:func:`fuzz_scenarios` generates seeded random workflows/platforms/
+timelines (failure traces drawn from ``Platform.failure_rates``,
+simultaneous events in the canonical order of
+:func:`event_sort_key`) and drives every policy plus the service loop
+through them — ``make fuzz`` runs the large corpus.  Simultaneous
+events are ordered canonically (``validate_event_timeline`` rejects
+other permutations with code ``"unsorted-tie"``), so timelines replay
+identically from JSON round-trips; :func:`canonical_event_order` sorts
+any event list into the accepted order.
 """
 from __future__ import annotations
 
@@ -40,8 +51,18 @@ from .events import (
     ProcArrival,
     ProcFailure,
     SpeedChange,
+    canonical_event_order,
     event_from_dict,
+    event_sort_key,
     validate_event_timeline,
+)
+from .fuzz import (
+    FUZZ_POLICIES,
+    FuzzCase,
+    FuzzReport,
+    FuzzViolation,
+    fuzz_scenarios,
+    generate_case,
 )
 from .policies import (
     FullReplan,
@@ -61,8 +82,12 @@ from .runner import (
 
 __all__ = [
     "EventTimelineError",
+    "FUZZ_POLICIES",
     "FrozenPrefix",
     "FullReplan",
+    "FuzzCase",
+    "FuzzReport",
+    "FuzzViolation",
     "LinkDegrade",
     "MigrationRecord",
     "NoReplan",
@@ -76,8 +101,12 @@ __all__ = [
     "SpeedChange",
     "TimelineReport",
     "apply_event_group",
+    "canonical_event_order",
     "event_from_dict",
+    "event_sort_key",
     "freeze_prefix",
+    "fuzz_scenarios",
+    "generate_case",
     "resolve_policy",
     "run_scenario",
     "validate_event_timeline",

@@ -31,7 +31,9 @@ __all__ = [
     "ProcArrival",
     "ProcFailure",
     "SpeedChange",
+    "canonical_event_order",
     "event_from_dict",
+    "event_sort_key",
     "validate_event_timeline",
 ]
 
@@ -41,7 +43,8 @@ class EventTimelineError(ValueError):
 
     ``index`` is the offending position in the event list, ``code`` a
     stable kind (``"bad-type"``, ``"non-finite-time"``,
-    ``"negative-time"``, ``"unsorted"``).  :class:`Scenario
+    ``"negative-time"``, ``"unsorted"``, ``"unsorted-tie"``).
+    :class:`Scenario
     <repro.scenario.runner.Scenario>` construction and the
     :mod:`repro.service` event loop both enforce this invariant up
     front — an unsorted or non-finite timeline must fail loudly before
@@ -55,10 +58,57 @@ class EventTimelineError(ValueError):
         super().__init__(f"[{code}] event #{index}: {detail}")
 
 
+#: canonical rank of an event kind *within* one timestamp: removals
+#: first, then arrivals, then in-place parameter changes — any fixed
+#: convention would do, but there must be exactly one so that a
+#: fuzz-generated timeline replays identically after a JSON round-trip.
+_KIND_RANK = {
+    "proc_failure": 0,
+    "proc_arrival": 1,
+    "speed_change": 2,
+    "link_degrade": 3,
+}
+
+
+def event_sort_key(ev: "PlatformEvent") -> tuple:
+    """Total order over events: ``(time, kind rank, per-kind fields)``.
+
+    Events at the *same* timestamp apply in list order (each sees the
+    platform produced by the previous one), so two permutations of
+    simultaneous events are different timelines.  This key defines the
+    single canonical permutation; :func:`validate_event_timeline`
+    rejects any other with code ``"unsorted-tie"`` and
+    :func:`canonical_event_order` produces it.
+    """
+    rank = _KIND_RANK.get(ev.kind, len(_KIND_RANK))
+    if isinstance(ev, ProcFailure):
+        tail: tuple = (tuple(sorted(ev.procs)),)
+    elif isinstance(ev, ProcArrival):
+        tail = (tuple((p.name, p.speed, p.memory) for p in ev.procs),)
+    elif isinstance(ev, SpeedChange):
+        tail = (ev.proc, ev.factor)
+    elif isinstance(ev, LinkDegrade):
+        tail = (ev.src, ev.dst, ev.bandwidth, ev.symmetric)
+    else:
+        tail = ()
+    return (ev.time, rank, ev.kind, tail)
+
+
+def canonical_event_order(events: Sequence["PlatformEvent"],
+                          ) -> list["PlatformEvent"]:
+    """``events`` sorted into the canonical total order
+    (:func:`event_sort_key`) that :func:`validate_event_timeline`
+    accepts."""
+    return sorted(events, key=event_sort_key)
+
+
 def validate_event_timeline(events: Sequence["PlatformEvent"]) -> None:
     """Check ``events`` is a time-sorted list of finite, non-negative
-    :class:`PlatformEvent` s; raise :class:`EventTimelineError` if not."""
+    :class:`PlatformEvent` s — with simultaneous events in the
+    canonical intra-timestamp order (:func:`event_sort_key`) — and
+    raise :class:`EventTimelineError` if not."""
     prev = None
+    prev_key = None
     for i, ev in enumerate(events):
         if not isinstance(ev, PlatformEvent):
             raise EventTimelineError(
@@ -74,7 +124,15 @@ def validate_event_timeline(events: Sequence["PlatformEvent"]) -> None:
                 "unsorted", i,
                 f"time {ev.time!r} precedes event #{i - 1} "
                 f"at {prev!r} — sort the timeline by time")
+        key = event_sort_key(ev)
+        if prev is not None and ev.time == prev and key < prev_key:
+            raise EventTimelineError(
+                "unsorted-tie", i,
+                f"{ev.describe()!r} at t={ev.time!r} precedes "
+                f"simultaneous event #{i - 1} in the canonical "
+                f"intra-timestamp order — use canonical_event_order()")
         prev = ev.time
+        prev_key = key
 
 
 @dataclass(frozen=True)

@@ -35,7 +35,11 @@ class MigrationRecord:
     ``lost_work`` the operations thrown away (elapsed time × speed).
     ``moves`` lists ``[from_proc_name, to_proc_name, n_tasks]``
     triples, keyed by stable processor *names* (indices shift across
-    failures).
+    failures).  ``checkpoint_decisions`` carries the per-in-flight-block
+    restart-vs-migrate pricing verdicts from
+    :func:`~repro.scenario.runner.freeze_prefix` (``decision`` /
+    ``restart_cost`` / ``migrate_cost`` / ``inputs_volume`` /
+    ``applied`` per block).
     """
 
     time: float
@@ -48,6 +52,7 @@ class MigrationRecord:
     restarted_blocks: int
     lost_work: float
     moves: list[list] = field(default_factory=list)
+    checkpoint_decisions: list[dict] = field(default_factory=list)
 
     def to_dict(self) -> dict:
         return {
@@ -60,6 +65,8 @@ class MigrationRecord:
             "restarted_blocks": self.restarted_blocks,
             "lost_work": self.lost_work,
             "moves": [list(m) for m in self.moves],
+            "checkpoint_decisions": [dict(c)
+                                     for c in self.checkpoint_decisions],
         }
 
     @classmethod

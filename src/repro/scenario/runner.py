@@ -35,7 +35,7 @@ same simulated makespan, bit-exactly.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Sequence
 
 from repro.core.dag import Workflow
@@ -154,6 +154,11 @@ class FrozenPrefix:
     restarted_tasks: int
     restarted_blocks: int
     lost_work: float
+    #: checkpoint-pricing decisions for the in-flight blocks (one dict
+    #: per surviving started block: restart-in-place vs migrate its
+    #: materialized inputs; ``applied`` says whether the verdict
+    #: changed pinning) — lands on the MigrationRecord
+    checkpoint_decisions: list[dict] = field(default_factory=list)
 
 
 def freeze_prefix(
@@ -165,6 +170,7 @@ def freeze_prefix(
     proc_map: dict[int, int | None],
     *,
     comm="contention-free",
+    price_migration: bool = False,
 ) -> FrozenPrefix:
     """Pause ``mapping``'s execution on ``platform`` at ``rel`` (time
     since this plan started), freeze the durably completed prefix, and
@@ -177,10 +183,24 @@ def freeze_prefix(
     ``proc_map`` carries assignments across the event
     (old index → new index, ``None`` for a lost processor); in-flight
     blocks restart, and survive *pinned* to their processor.
+
+    Every surviving in-flight block is also *priced*: restart-in-place
+    on its (possibly slowed) processor vs. migrating — re-transferring
+    its already-materialized inputs (edge volumes from completed
+    producer blocks) to the best other processor and recomputing there.
+    The verdicts land in ``checkpoint_decisions`` (and on the
+    :class:`~repro.scenario.report.MigrationRecord`); with
+    ``price_migration=True`` a migrate-wins block is left *unpinned* so
+    the replan may actually move it.  The default keeps the historical
+    always-pin behaviour — pricing is then advisory only.  Execution
+    stays restart-based either way (no partial-block state is carried);
+    the pricing models where the restart happens, not a mid-block
+    checkpoint image.
     """
     with trace_span("scenario.freeze", rel=rel):
         return _freeze_prefix(wf, mapping, platform, rel, new_platform,
-                              proc_map, comm=comm)
+                              proc_map, comm=comm,
+                              price_migration=price_migration)
 
 
 def _freeze_prefix(
@@ -192,6 +212,7 @@ def _freeze_prefix(
     proc_map: dict[int, int | None],
     *,
     comm="contention-free",
+    price_migration: bool = False,
 ) -> FrozenPrefix:
     q = mapping.quotient
     blocks, edges = build_specs(q, platform)
@@ -211,6 +232,13 @@ def _freeze_prefix(
     pinned: set[int] = set()
     restarted_tasks = restarted_blocks = 0
     lost_work = 0.0
+    decisions: list[dict] = []
+    # materialized inputs per in-flight block: edge volumes whose
+    # producer block durably completed — what a migration re-transfers
+    inputs_vol = {vid: 0.0 for vid in inflight_vids}
+    for e in edges:
+        if e.dst in inputs_vol and e.src in completed_vids:
+            inputs_vol[e.dst] += e.volume
     for vid in sorted(q.members):
         if vid in completed_vids:
             continue
@@ -230,7 +258,37 @@ def _freeze_prefix(
                        - trace.start[vid])
             lost_work += elapsed * platform.procs[old_pj].speed
             if new_pj is not None:
-                pinned.add(b)
+                # price restart-in-place vs migrate-with-inputs on the
+                # post-event platform
+                w = q.weight[vid]
+                vol = inputs_vol[vid]
+                restart_cost = w / new_platform.procs[new_pj].speed
+                migrate_cost = None
+                migrate_to = None
+                for j in range(new_platform.k):
+                    if j == new_pj:
+                        continue
+                    c = (w / new_platform.procs[j].speed
+                         + vol / new_platform.bandwidth_between(new_pj, j))
+                    if migrate_cost is None or c < migrate_cost:
+                        migrate_cost, migrate_to = c, j
+                verdict = ("migrate" if migrate_cost is not None
+                           and migrate_cost < restart_cost
+                           else "restart-in-place")
+                applied = price_migration and verdict == "migrate"
+                decisions.append({
+                    "block": b, "tasks": len(members),
+                    "proc": new_platform.procs[new_pj].name,
+                    "inputs_volume": vol,
+                    "restart_cost": restart_cost,
+                    "migrate_cost": migrate_cost,
+                    "migrate_to": (new_platform.procs[migrate_to].name
+                                   if migrate_to is not None else None),
+                    "decision": verdict,
+                    "applied": applied,
+                })
+                if not applied:
+                    pinned.add(b)
     state = ResumeState(wf=sub, platform=new_platform,
                         blocks=res_blocks, proc_of_block=res_procs,
                         pinned=pinned)
@@ -240,6 +298,7 @@ def _freeze_prefix(
         completed_vids=completed_vids, inflight_vids=inflight_vids,
         old_names=old_names, restarted_tasks=restarted_tasks,
         restarted_blocks=restarted_blocks, lost_work=lost_work,
+        checkpoint_decisions=decisions,
     )
 
 
@@ -264,6 +323,7 @@ def _migration_record(
     restarted_tasks: int,
     restarted_blocks: int,
     lost_work: float,
+    checkpoint_decisions: list[dict] | None = None,
 ) -> MigrationRecord:
     moved_tasks = moved_blocks = 0
     displaced_tasks = displaced_blocks = 0
@@ -303,6 +363,7 @@ def _migration_record(
         restarted_blocks=restarted_blocks,
         lost_work=lost_work,
         moves=[[a, b, n] for (a, b), n in sorted(moves.items())],
+        checkpoint_decisions=list(checkpoint_decisions or []),
     )
 
 
@@ -313,6 +374,7 @@ def run_scenario(
     config: SchedulerConfig | None = None,
     sim_options: dict | None = None,
     initial_report=None,
+    price_migration: bool = False,
 ) -> TimelineReport:
     """Execute ``scenario`` under ``policy``; see module docstring.
 
@@ -328,6 +390,10 @@ def run_scenario(
     :class:`~repro.core.scheduler.ScheduleReport` for this exact
     workflow/platform (policy sweeps over one scenario replan from the
     same start without re-running the k' sweep each time).
+    ``price_migration=True`` lets the checkpoint pricing in
+    :func:`freeze_prefix` unpin in-flight blocks whose materialized
+    inputs are cheaper to move than to recompute in place; the verdicts
+    appear in the migration log either way.
     """
     t_wall = time.perf_counter()
     cfg = config if config is not None else SchedulerConfig()
@@ -389,7 +455,8 @@ def run_scenario(
         new_platform, proc_map = apply_event_group(group, platform)
         fz = freeze_prefix(
             wf, res, platform, rel, new_platform, proc_map,
-            comm=sim_kw.get("comm", "contention-free"))
+            comm=sim_kw.get("comm", "contention-free"),
+            price_migration=price_migration)
         completed_total += len(fz.completed_local)
         state = fz.state
 
@@ -400,7 +467,8 @@ def run_scenario(
         replan_times.append(time.perf_counter() - t0)
         migrations.append(_migration_record(
             te, pol.name, state, fz.old_names, report, new_platform,
-            fz.restarted_tasks, fz.restarted_blocks, fz.lost_work))
+            fz.restarted_tasks, fz.restarted_blocks, fz.lost_work,
+            fz.checkpoint_decisions))
 
         t = te
         wf = state.wf

@@ -544,12 +544,18 @@ class WorkflowService:
         job.gen += 1
         self._push(t + sim.makespan, _PRIO_COMPLETE, "complete",
                    (job, job.gen))
-        self._note({
+        entry = {
             "t": t, "kind": "replan", "job": job.seq, "path": path,
             "procs": len(job.allocation),
             "residual_tasks": job.wf.n,
             "remaining_makespan": sim.makespan,
-        })
+        }
+        ckpt = getattr(job, "_checkpoint_decisions", None)
+        if ckpt:
+            entry["checkpoint_priced"] = len(ckpt)
+            entry["checkpoint_migrate_wins"] = sum(
+                1 for c in ckpt if c["decision"] == "migrate")
+        self._note(entry)
 
     def _replan_job(self, job: _Job, t: float) -> None:
         tr = _trc.current_tracer()
@@ -590,6 +596,8 @@ class WorkflowService:
             carve_map = {cj: None for cj in range(old_carve.k)}
         fz = freeze_prefix(job.wf, job.mapping, old_carve, rel,
                            new_carve, carve_map, comm=self._comm())
+        # restart-vs-migrate pricing for the replan log entry
+        job._checkpoint_decisions = fz.checkpoint_decisions
         if fz.state.wf.n == 0:
             return  # nothing left to run; completion event stands
         warm = None

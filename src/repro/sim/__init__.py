@@ -229,7 +229,7 @@ def simulate(
                        finish=trace.xfer_finish[(e.src, e.dst)])
         for e in edges
     ]
-    return SimReport(
+    report = SimReport(
         comm=comm_model.name,
         makespan=ms,
         horizon=trace.horizon,
@@ -247,6 +247,11 @@ def simulate(
         memory=mem_trace,
         envelope=envelope,
     )
+    if platform.power or platform.failure_rates:
+        from repro.objectives import energy_from_sim  # deferred
+
+        report.energy = energy_from_sim(report, platform)
+    return report
 
 
 def trace_memory(mapping, platform: Platform | None = None,

@@ -235,6 +235,10 @@ class SimReport:
     events: list[SimEvent] = field(default_factory=list)
     memory: MemoryTrace | None = None
     envelope: JitterEnvelope | None = None
+    #: energy/exposure accounting from the per-proc busy integrals
+    #: (:func:`repro.objectives.energy_from_sim`) — attached when the
+    #: platform carries a failure or power model, else ``None``
+    energy: dict | None = None
 
     # -------------------------------------------------------------- #
     def to_dict(self) -> dict:
@@ -255,6 +259,7 @@ class SimReport:
             "events": [e.to_list() for e in self.events],
             "memory": self.memory.to_dict() if self.memory else None,
             "envelope": self.envelope.to_dict() if self.envelope else None,
+            "energy": self.energy,
         }
 
     def to_json(self, **kw) -> str:
@@ -283,6 +288,7 @@ class SimReport:
                     if d.get("memory") else None),
             envelope=(JitterEnvelope.from_dict(d["envelope"])
                       if d.get("envelope") else None),
+            energy=d.get("energy"),
         )
 
     @classmethod

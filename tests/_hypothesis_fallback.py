@@ -4,7 +4,8 @@ The container image does not ship ``hypothesis``; rather than skip every
 property test, this module provides a tiny seeded-random implementation
 of the small API surface the test-suite uses:
 
-* ``st.integers / floats / booleans / sampled_from / composite``
+* ``st.integers / floats / booleans / sampled_from / lists / sets /
+  composite``
 * ``@given(...)`` — runs the test body ``max_examples`` times with
   pseudo-random draws (deterministic: seeded per test name),
 * ``@settings(max_examples=..., deadline=...)`` — honoured for
@@ -54,6 +55,32 @@ def _sampled_from(seq) -> _Strategy:
     return _Strategy(lambda rng: rng.choice(seq))
 
 
+def _lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+           unique: bool = False) -> _Strategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        if not unique:
+            return [elements.example(rng) for _ in range(n)]
+        out: list = []
+        seen: set = set()
+        for _ in range(100 * (n + 1)):  # bounded retry for uniqueness
+            if len(out) >= n:
+                break
+            v = elements.example(rng)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return out
+
+    return _Strategy(draw)
+
+
+def _sets(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    lst = _lists(elements, min_size, max_size, unique=True)
+    return _Strategy(lambda rng: set(lst.example(rng)))
+
+
 def _composite(fn):
     """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
 
@@ -75,6 +102,8 @@ st = SimpleNamespace(
     floats=_floats,
     booleans=_booleans,
     sampled_from=_sampled_from,
+    lists=_lists,
+    sets=_sets,
     composite=_composite,
 )
 

@@ -1,0 +1,366 @@
+"""repro.objectives: reliability/energy accounting + objective stages.
+
+Property tests pin the accounting identities (energy decomposition,
+reliability bounds and monotonicity), bit-inertness of the objective
+stages on model-free platforms, the structured infeasibility of an
+unreachable reliability floor, the sim-side energy integrals, and the
+checkpoint-pricing decisions in the replan path.
+"""
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    Platform,
+    ProcPower,
+    Processor,
+    Scheduler,
+    SchedulerConfig,
+    default_cluster,
+    generate_workflow,
+)
+from repro.objectives import (
+    EnergyReport,
+    ReliabilityReport,
+    block_exposures,
+    energy_from_sim,
+    energy_plan,
+    plan_energy,
+    plan_reliability,
+    schedule_energy,
+    schedule_reliability,
+)
+from repro.sim import simulate
+
+
+@pytest.fixture(scope="module")
+def platform():
+    return default_cluster()
+
+
+@pytest.fixture(scope="module")
+def wf(platform):
+    return generate_workflow("genome", 120, seed=3, platform=platform)
+
+
+@pytest.fixture(scope="module")
+def mapping(wf, platform):
+    rep = Scheduler(SchedulerConfig()).schedule(wf, platform)
+    assert rep.feasible
+    return rep.best
+
+
+def _modeled(platform, rng_rates=None, power_kw=None):
+    k = platform.k
+    # calibrated so the nominal schedule's success prob ≈ 0.96 on the
+    # module fixture — floors of 0.9/0.95 are reachable, 0.999999 not
+    rates = rng_rates or {j: 5e-7 * (j + 1) for j in range(k)}
+    power = power_kw or {j: ProcPower(0.5 + 0.1 * j, 2.0) for j in range(k)}
+    return platform.with_failure_rates(rates).with_power(power)
+
+
+# ---------------------------------------------------------------------- #
+# reliability accounting
+# ---------------------------------------------------------------------- #
+class TestReliability:
+    def test_no_model_is_trivial(self, mapping, platform):
+        rel = schedule_reliability(mapping, platform)
+        assert rel.success_prob == 1.0
+        assert rel.weighted_makespan == rel.makespan
+
+    @given(scale=st.floats(1e-6, 1e-2))
+    @settings(max_examples=20, deadline=None)
+    def test_bounds_and_monotonicity(self, mapping, platform, scale):
+        """success_prob ∈ (0, 1], and scaling every failure rate up
+        (more exposure-weighted hazard) never increases it."""
+        k = platform.k
+        p1 = platform.with_failure_rates(
+            {j: scale for j in range(k)})
+        p2 = platform.with_failure_rates(
+            {j: 2 * scale for j in range(k)})
+        r1 = schedule_reliability(mapping, p1)
+        r2 = schedule_reliability(mapping, p2)
+        for r in (r1, r2):
+            assert 0.0 < r.success_prob <= 1.0
+            assert r.weighted_makespan >= r.makespan
+        assert r2.success_prob <= r1.success_prob
+
+    def test_monotone_in_exposure(self, mapping, platform):
+        """Slowing blocks down (longer exposure at the same rates)
+        never increases the success probability."""
+        pf = platform.with_failure_rates(
+            {j: 1e-4 for j in range(platform.k)})
+        fast = schedule_reliability(mapping, pf)
+        slow = schedule_reliability(
+            mapping, pf,
+            speed_scale={v: 0.5 for v in mapping.quotient.members})
+        assert slow.success_prob <= fast.success_prob
+        exp_fast = block_exposures(mapping, pf)
+        exp_slow = block_exposures(
+            mapping, pf,
+            {v: 0.5 for v in mapping.quotient.members})
+        for v in exp_fast:
+            assert exp_slow[v] == pytest.approx(2 * exp_fast[v])
+
+    def test_closed_form(self, mapping, platform):
+        pf = platform.with_failure_rates({0: 3e-4, 2: 7e-4})
+        rel = schedule_reliability(mapping, pf)
+        q = mapping.quotient
+        hazard = sum(pf.failure_rate(q.proc[v]) * dur
+                     for v, dur in rel.exposure.items())
+        assert rel.success_prob == pytest.approx(math.exp(-hazard))
+        assert rel.hazard == pytest.approx(
+            sum(rel.proc_hazard.values()))
+
+    def test_json_roundtrip(self, mapping, platform):
+        rel = schedule_reliability(mapping, _modeled(platform))
+        assert ReliabilityReport.from_dict(rel.to_dict()) == rel
+
+
+# ---------------------------------------------------------------------- #
+# energy accounting
+# ---------------------------------------------------------------------- #
+class TestEnergy:
+    @given(static=st.floats(0.0, 5.0), dyn=st.floats(0.1, 5.0),
+           alpha=st.floats(1.0, 3.0))
+    @settings(max_examples=20, deadline=None)
+    def test_decomposition_identity(self, mapping, platform,
+                                    static, dyn, alpha):
+        """energy(plan) == Σ per-block dynamic + Σ per-proc static."""
+        pw = platform.with_power(
+            {j: ProcPower(static, dyn, alpha) for j in range(platform.k)})
+        e = schedule_energy(mapping, pw)
+        assert e.total == pytest.approx(
+            sum(e.per_block_dynamic.values())
+            + sum(e.per_proc_static.values()), rel=1e-12)
+        assert e.dynamic == pytest.approx(
+            sum(e.per_block_dynamic.values()), rel=1e-12)
+        assert e.static == pytest.approx(
+            sum(e.per_proc_static.values()), rel=1e-12)
+
+    def test_block_dynamic_closed_form(self, mapping, platform):
+        pw = platform.with_power(
+            {j: ProcPower(0.0, 3.0, 2.0) for j in range(platform.k)})
+        e = schedule_energy(mapping, pw)
+        q = mapping.quotient
+        for v, ev in e.per_block_dynamic.items():
+            s = platform.procs[q.proc[v]].speed
+            assert ev == pytest.approx(3.0 * q.weight[v] * s)  # (α-1)=1
+
+    def test_dvfs_scaling_saves_dynamic_energy(self, mapping, platform):
+        pw = platform.with_power(
+            {j: ProcPower(0.0, 2.0, 2.0) for j in range(platform.k)})
+        nominal = schedule_energy(mapping, pw)
+        half = schedule_energy(
+            mapping, pw,
+            speed_of_block={v: 0.5 for v in mapping.quotient.members})
+        assert half.dynamic == pytest.approx(0.5 * nominal.dynamic)
+        assert half.horizon == pytest.approx(2 * nominal.horizon)
+
+    def test_json_roundtrip(self, mapping, platform):
+        e = schedule_energy(mapping, _modeled(platform),
+                            reliability_floor=0.9)
+        assert EnergyReport.from_dict(e.to_dict()) == e
+
+
+class TestEnergyPlan:
+    def test_floor_met_or_none(self, mapping, platform):
+        pf = _modeled(platform)
+        plan = energy_plan(mapping, pf, reliability_floor=0.95,
+                           speed_levels=(0.5, 0.75, 1.0))
+        assert plan is not None
+        assert plan.reliability >= 0.95
+        # greedy only raises speeds above the all-lowest start
+        assert all(0.5 <= f <= 1.0 for f in plan.speed_of_block.values())
+
+    def test_unconstrained_runs_lowest_level(self, mapping, platform):
+        pf = _modeled(platform)
+        plan = energy_plan(mapping, pf, speed_levels=(0.25, 1.0))
+        assert set(plan.speed_of_block.values()) == {0.25}
+
+    def test_unreachable_floor_is_none(self, mapping, platform):
+        hot = platform.with_failure_rates(
+            {j: 0.5 for j in range(platform.k)}).with_power(
+            {j: ProcPower(1.0, 1.0) for j in range(platform.k)})
+        assert energy_plan(mapping, hot,
+                           reliability_floor=0.999999) is None
+
+    def test_bad_levels_rejected(self, mapping, platform):
+        with pytest.raises(ValueError):
+            energy_plan(mapping, _modeled(platform),
+                        speed_levels=(0.0,))
+        with pytest.raises(ValueError):
+            energy_plan(mapping, _modeled(platform),
+                        speed_levels=(1.5,))
+
+
+# ---------------------------------------------------------------------- #
+# sim-side accounting (per-proc busy integrals)
+# ---------------------------------------------------------------------- #
+class TestSimEnergy:
+    def test_attached_when_modeled(self, mapping, platform):
+        pf = _modeled(platform)
+        sim = simulate(mapping, pf)
+        assert sim.energy is not None
+        acc = energy_from_sim(sim, pf)
+        assert sim.energy == acc
+        assert acc["total"] == pytest.approx(
+            sum(acc["dynamic"].values()) + sum(acc["static"].values()),
+            rel=1e-12)
+        assert 0 < acc["success_prob"] <= 1
+
+    def test_absent_without_model(self, mapping, platform):
+        assert simulate(mapping, platform).energy is None
+
+    def test_matches_analytic_at_nominal(self, mapping, platform):
+        """Deterministic replay: per-proc busy integrals equal the sum
+        of block durations, so sim dynamic energy == analytic dynamic
+        energy (statics differ only via horizon vs makespan)."""
+        pf = _modeled(platform)
+        sim = simulate(mapping, pf)
+        analytic = schedule_energy(mapping, pf)
+        assert sum(sim.energy["dynamic"].values()) == pytest.approx(
+            analytic.dynamic, rel=1e-9)
+        hazard_sim = sim.energy["hazard"]
+        rel = schedule_reliability(mapping, pf)
+        assert hazard_sim == pytest.approx(rel.hazard, rel=1e-9)
+
+    def test_json_roundtrip(self, mapping, platform):
+        from repro.sim import SimReport
+
+        sim = simulate(mapping, _modeled(platform))
+        assert SimReport.from_json(sim.to_json()).energy == sim.energy
+
+
+# ---------------------------------------------------------------------- #
+# objective stages: registration, sweep, inertness, infeasibility
+# ---------------------------------------------------------------------- #
+class TestObjectiveStages:
+    def test_registered_pipelines(self):
+        from repro.core.scheduler import PIPELINES
+
+        assert PIPELINES["reliability"][-1] == "reliability"
+        assert PIPELINES["energy"][-1] == "energy"
+
+    def test_bit_inert_without_models(self, wf, platform):
+        base = Scheduler(SchedulerConfig()).schedule(wf, platform)
+        for algo in ("reliability", "energy"):
+            rep = Scheduler(SchedulerConfig(),
+                            algorithm=algo).schedule(wf, platform)
+            assert rep.makespan == base.makespan
+            assert rep.best.extras.get(algo) is None
+            assert [p.makespan for p in rep.sweep] == \
+                [p.makespan for p in base.sweep]
+
+    def test_reliability_reported_on_schedule_report(self, wf, platform):
+        pf = _modeled(platform)
+        rep = Scheduler(SchedulerConfig(),
+                        algorithm="reliability").schedule(wf, pf)
+        assert rep.feasible
+        assert rep.reliability is not None
+        assert 0 < rep.reliability.success_prob <= 1
+
+    def test_parallel_sweep_matches_serial(self, wf, platform):
+        pf = _modeled(platform)
+        serial = plan_reliability(wf, pf, workers=1)
+        par = plan_reliability(wf, pf, workers=2)
+        assert serial.reliability.weighted_makespan == pytest.approx(
+            par.reliability.weighted_makespan)
+        assert serial.k_prime == par.k_prime
+
+    def test_plan_reliability_picks_weighted_winner(self, wf, platform):
+        pf = _modeled(platform)
+        res = plan_reliability(wf, pf)
+        assert res.feasible
+        best_w = res.reliability.weighted_makespan
+        for p in res.report.sweep:
+            if not p.feasible:
+                continue
+            h = p.metrics.get("histograms", {}).get(
+                "objective_rel_weighted_ms")
+            if h and h.get("count"):
+                assert best_w <= h["sum"] + 1e-9
+
+    def test_plan_energy_floor_and_infeasibility(self, wf, platform):
+        pf = _modeled(platform)
+        ok = plan_energy(wf, pf, reliability_floor=0.9,
+                         speed_levels=(0.5, 1.0))
+        assert ok.feasible and ok.energy.reliability >= 0.9
+        hot = platform.with_failure_rates(
+            {j: 0.5 for j in range(platform.k)}).with_power(
+            {j: ProcPower(1.0, 1.0) for j in range(platform.k)})
+        bad = plan_energy(wf, hot, reliability_floor=0.999999)
+        assert not bad.feasible
+        assert bad.report.infeasibility is not None
+        assert bad.report.infeasibility.stage == "objective"
+
+    def test_objective_metrics_observed(self, wf, platform):
+        pf = _modeled(platform)
+        rep = Scheduler(SchedulerConfig(),
+                        algorithm="energy").schedule(wf, pf)
+        hists = rep.metrics.get("histograms", {})
+        assert "objective_energy_total" in hists
+        assert "objective_success_prob" in hists
+
+
+# ---------------------------------------------------------------------- #
+# checkpoint-cost-aware migration pricing
+# ---------------------------------------------------------------------- #
+class TestCheckpointPricing:
+    def _timeline(self, price_migration):
+        from repro.scenario import ProcFailure, Scenario, run_scenario
+
+        plat = default_cluster()
+        w = generate_workflow("genome", 150, seed=5, platform=plat)
+        sc = Scenario(w, plat, [ProcFailure(time=30.0, procs={0})])
+        return run_scenario(sc, policy="pinned-warm-start",
+                            config=SchedulerConfig(simulate=True),
+                            price_migration=price_migration), w
+
+    def test_decisions_in_migration_log(self):
+        tl, _ = self._timeline(False)
+        assert tl.feasible
+        assert tl.migrations, "failure must trigger a replan"
+        decs = [d for m in tl.migrations for d in m.checkpoint_decisions]
+        for d in decs:
+            assert d["decision"] in ("restart-in-place", "migrate")
+            assert d["restart_cost"] > 0
+            assert d["inputs_volume"] >= 0
+            assert not d["applied"]  # advisory without price_migration
+        # round-trips with the rest of the record
+        from repro.scenario import MigrationRecord
+
+        for m in tl.migrations:
+            rt = MigrationRecord.from_dict(m.to_dict())
+            assert rt.checkpoint_decisions == m.checkpoint_decisions
+
+    def test_price_migration_unpins_winners(self):
+        tl, w = self._timeline(True)
+        assert tl.feasible
+        decs = [d for m in tl.migrations for d in m.checkpoint_decisions]
+        for d in decs:
+            assert d["applied"] == (d["decision"] == "migrate")
+        # invariants still hold with pricing applied
+        assert tl.validate(memory_trace=True) == []
+        last = tl.segments[-1]
+        assert last.completed_before + last.n_tasks == w.n
+
+    def test_pricing_prefers_restart_on_uniform_platform(self):
+        """With equal speeds, migrating can never beat restarting in
+        place (same compute cost + a transfer)."""
+        from repro.scenario import ProcFailure, Scenario, run_scenario
+
+        plat = Platform([Processor(f"u{j}", 1.0, 256.0)
+                         for j in range(4)], bandwidth=1.0, name="uni")
+        w = generate_workflow("genome", 100, seed=9, platform=plat)
+        sc = Scenario(w, plat, [ProcFailure(time=20.0, procs={0})])
+        tl = run_scenario(sc, policy="pinned-warm-start",
+                          config=SchedulerConfig(simulate=True))
+        for m in tl.migrations:
+            for d in m.checkpoint_decisions:
+                assert d["decision"] == "restart-in-place"

@@ -15,7 +15,7 @@ try:
 except ImportError:                      # pragma: no cover
     from _hypothesis_fallback import given, settings, st
 
-from repro.core import Platform, Processor
+from repro.core import Platform, ProcPower, Processor
 from repro.scenario import (
     LinkDegrade,
     ProcArrival,
@@ -30,17 +30,24 @@ def _platform(k=8):
          for i in range(k)],
         bandwidth=1.0, name="prop",
         link_bandwidth={(0, 1): 0.5, (1, 0): 0.5, (2, 5): 3.0},
+        failure_rates={0: 1e-3, 3: 5e-4, 5: 2e-3},
+        power={1: ProcPower(0.5, 2.0), 5: ProcPower(1.0, 3.0, 2.5)},
     )
 
 
 def _signature(plat: Platform):
-    """Index-free fingerprint: processors by name + links by name pair."""
+    """Index-free fingerprint: processors by name + links by name pair
+    + failure/power models by name."""
     procs = {p.name: (p.speed, p.memory) for p in plat.procs}
     links = {
         (plat.procs[a].name, plat.procs[b].name): bw
         for (a, b), bw in plat.link_bandwidth.items()
     }
-    return procs, links, plat.bandwidth
+    rates = {plat.procs[j].name: lam
+             for j, lam in plat.failure_rates.items()}
+    power = {plat.procs[j].name: pw.to_list()
+             for j, pw in plat.power.items()}
+    return procs, links, plat.bandwidth, rates, power
 
 
 @st.composite
@@ -162,3 +169,66 @@ class TestTransformComposition:
                               bandwidth=0.25).apply(alt)
         alt, _ = SpeedChange(0.0, proc=n2[n1[5]], factor=0.5).apply(alt)
         assert _signature(alt) == _signature(cur)
+
+
+class TestModelCarrying:
+    """``failure_rates`` / ``power`` ride the elastic transforms exactly
+    like ``link_bandwidth``: preserved by index-stable transforms,
+    reindexed by ``without``, dropped with their processor."""
+
+    def test_without_with_speed_with_processors_compose(self):
+        plat = _platform()
+        cur = plat.with_processors([Processor("new0", 3.0, 32.0)])
+        cur = cur.with_speed(5, 0.5)
+        cur = cur.without({0, 1})
+        # p0's failure rate died with p0; p3/p5's followed the reindex
+        rates = {cur.procs[j].name: lam
+                 for j, lam in cur.failure_rates.items()}
+        assert rates == {"p3": 5e-4, "p5": 2e-3}
+        power = {cur.procs[j].name: pw
+                 for j, pw in cur.power.items()}
+        assert power == {"p5": ProcPower(1.0, 3.0, 2.5)}
+        # the speed change neither moved nor scaled the models
+        idx = {p.name: j for j, p in enumerate(cur.procs)}
+        assert cur.failure_rate(idx["p3"]) == 5e-4
+        assert cur.proc_power(idx["p5"]).busy_watts(1.0) == 4.0
+
+    def test_order_independence_direct(self):
+        plat = _platform()
+        a = plat.with_processors([Processor("x", 1.0, 16.0)]) \
+                .with_speed(2, 2.0).without({4})
+        b = plat.without({4}).with_speed(2, 2.0) \
+                .with_processors([Processor("x", 1.0, 16.0)])
+        assert _signature(a) == _signature(b)
+
+    @given(failed=st.sets(st.integers(0, 7), min_size=1, max_size=6))
+    @settings(max_examples=40, deadline=None)
+    def test_without_reindexes_models(self, failed):
+        plat = _platform()
+        cur = plat.without(failed)
+        surviving = {p.name for p in cur.procs}
+        want_rates = {plat.procs[j].name: lam
+                      for j, lam in plat.failure_rates.items()
+                      if plat.procs[j].name in surviving}
+        got_rates = {cur.procs[j].name: lam
+                     for j, lam in cur.failure_rates.items()}
+        assert got_rates == want_rates
+        want_power = {plat.procs[j].name: pw
+                      for j, pw in plat.power.items()
+                      if plat.procs[j].name in surviving}
+        got_power = {cur.procs[j].name: pw
+                     for j, pw in cur.power.items()}
+        assert got_power == want_power
+
+    def test_with_merge_semantics(self):
+        plat = _platform()
+        p2 = plat.with_failure_rates({1: 9e-9})
+        assert p2.failure_rates == {0: 1e-3, 1: 9e-9, 3: 5e-4, 5: 2e-3}
+        p3 = plat.with_failure_rates({1: 9e-9}, merge=False)
+        assert p3.failure_rates == {1: 9e-9}
+        with pytest.raises(ValueError):
+            plat.with_failure_rates({99: 1e-3})
+        with pytest.raises(ValueError):
+            plat.with_failure_rates({0: -1.0})
+        with pytest.raises(TypeError):
+            plat.with_power({0: "not a ProcPower"})
